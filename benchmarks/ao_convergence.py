@@ -1,0 +1,44 @@
+"""Algorithm 1 diagnostics: bubble-rate descent + Lemma 1 behaviour."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.ao import algorithm1, lemma1_k
+from repro.core.costs import resnet18_profile
+from repro.wireless.channel import ChannelParams
+from repro.wireless.fleet import sample_fleet
+
+
+def run(quick=False):
+    prof = resnet18_profile()
+    out = []
+    seeds = range(3 if quick else 10)
+    for seed in seeds:
+        fleet = sample_fleet(8, seed=seed)
+        res = algorithm1(prof, fleet, batch=512)
+        out.append({
+            "seed": seed,
+            "l": res.plan.l,
+            "k": res.plan.k,
+            "bubble": res.bubble,
+            "descent": res.history[0] - res.history[-1],
+            "iters": len(res.history),
+        })
+    return out
+
+
+def main(quick=False):
+    rows = run(quick=quick)
+    print(f"{'seed':>4s} {'l':>3s} {'k':>4s} {'bubble':>8s} "
+          f"{'descent':>9s} {'iters':>6s}")
+    for r in rows:
+        print(f"{r['seed']:4d} {r['l']:3d} {r['k']:4d} {r['bubble']:8.4f} "
+              f"{r['descent']:+9.4f} {r['iters']:6d}")
+    bubbles = [r["bubble"] for r in rows]
+    print(f"mean bubble rate {np.mean(bubbles):.4f} "
+          f"(all descents >= 0: {all(r['descent'] >= -1e-9 for r in rows)})")
+    return {"mean_bubble": float(np.mean(bubbles))}
+
+
+if __name__ == "__main__":
+    main()

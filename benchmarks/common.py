@@ -1,0 +1,68 @@
+"""Shared benchmark plumbing: scheme timing under the wireless system model.
+
+"Convergence time" follows the paper's accounting: SL / PSL / C2P2SL apply
+mathematically equivalent updates (tests/test_equivalence.py), so the
+convergence time ratio equals the per-round makespan ratio; EPSL converges
+in more rounds at lower final accuracy (Fig 3) — reported separately by
+fig3_accuracy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.ao import algorithm1, feasible_l
+from repro.core.costs import LayerProfile, resnet18_profile
+from repro.core.schedule import (Plan, simulate_c2p2sl, simulate_epsl,
+                                 simulate_psl, simulate_sl, task_times)
+from repro.wireless.channel import ChannelParams
+from repro.wireless.fleet import sample_fleet
+
+
+def scheme_round_times(n_ue: int, seed: int, *,
+                       bandwidth_hz: float = 100e6,
+                       batch: int = 512,
+                       profile: LayerProfile | None = None) -> dict:
+    """Per-batch makespan of each scheme on one sampled fleet.
+
+    Baselines follow their papers: one shared cut layer (the best
+    storage-feasible single cut under uniform allocation), uniform batch
+    split and uniform TDMA slots.  C2P2SL jointly optimizes (l, k, b, tau)
+    with Algorithm 1.
+    """
+    prof = profile or resnet18_profile()
+    ch = ChannelParams(bandwidth_hz=bandwidth_hz)
+    fleet = sample_fleet(n_ue, seed=seed, channel=ch)
+    b_uni = np.full(n_ue, batch / n_ue)
+    tau_uni = np.full(n_ue, ch.frame_s / n_ue)
+
+    # baseline cut: best feasible single choice for PSL (fair baseline)
+    best_l, best_psl = None, np.inf
+    for l in feasible_l(prof, fleet, b_uni):
+        t1 = task_times(prof, fleet, Plan(l=l, k=1, b=b_uni, tau=tau_uni))
+        ms = simulate_psl(t1)
+        if ms < best_psl:
+            best_l, best_psl = l, ms
+    t1 = task_times(prof, fleet, Plan(l=best_l, k=1, b=b_uni, tau=tau_uni))
+
+    res = algorithm1(prof, fleet, batch=batch)
+    t_opt = task_times(prof, fleet, res.plan)
+    ms_c2p2, _ = simulate_c2p2sl(t_opt, res.plan.k)
+
+    return {
+        "SL": simulate_sl(prof, fleet, Plan(l=best_l, k=1, b=b_uni,
+                                            tau=tau_uni)),
+        "PSL": best_psl,
+        "EPSL": simulate_epsl(t1, n_ue),
+        "C2P2SL": ms_c2p2,
+        "plan": res.plan,
+        "bubble": res.bubble,
+    }
+
+
+def averaged(n_ue: int, seeds, **kw) -> dict:
+    acc = {}
+    for s in seeds:
+        r = scheme_round_times(n_ue, s, **kw)
+        for k in ("SL", "PSL", "EPSL", "C2P2SL"):
+            acc.setdefault(k, []).append(r[k])
+    return {k: float(np.mean(v)) for k, v in acc.items()}

@@ -1,0 +1,108 @@
+"""Paper Fig. 3: test accuracy vs (simulated) training time, n=8 UEs.
+
+Real JAX training of the paper's split ResNet-18 on the synthetic
+CIFAR-10 stand-in (offline container), with per-round wall time taken from
+the event-driven schedule simulator.  Claims validated:
+  * C2P2SL accuracy tracks PSL/SL exactly (identical updates),
+  * EPSL converges lower (gradient aggregation approximation),
+  * C2P2SL reaches any accuracy threshold in the least simulated time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import scheme_round_times
+from repro.data import image_batches
+from repro.models import resnet
+from repro.sl import (init_sl_state, make_c2p2sl_step, make_epsl_step,
+                      make_psl_step, make_sl_step, resnet_split, shard_batch)
+from repro.training import sgd
+
+
+def eval_acc(params, batches):
+    accs = []
+    for b in batches:
+        logits = resnet.forward(params, b["images"])
+        accs.append(float((logits.argmax(-1) == b["labels"]).mean()))
+    return float(np.mean(accs))
+
+
+def run(steps=120, batch=64, n_ue=8, eval_every=20, seed=0, quick=False):
+    if quick:
+        steps, batch = 40, 32
+    times = scheme_round_times(n_ue, seed, batch=batch)
+    plan = times["plan"]
+    k = plan.k
+
+    # split data per plan batch sizes (scaled to the benchmark batch)
+    b_alloc = np.maximum(1, np.round(
+        plan.b / plan.b.sum() * batch)).astype(int)
+    b_alloc[np.argmax(b_alloc)] += batch - b_alloc.sum()
+    k_run = int(min(k, np.min(b_alloc[b_alloc > 0])))
+
+    gen = image_batches(batch, seed=seed)
+    test_batches = [next(image_batches(64, seed=999 + i)) for i in range(4)]
+    l = plan.l
+    spec = resnet_split(l)
+    opt = sgd(0.05, momentum=0.9)
+
+    schemes = {
+        "C2P2SL": (make_c2p2sl_step(spec, opt, k=k_run), times["C2P2SL"]),
+        "PSL": (make_psl_step(spec, opt), times["PSL"]),
+        "SL": (make_sl_step(spec, opt), times["SL"]),
+        "EPSL": (make_epsl_step(spec, opt), times["EPSL"]),
+    }
+
+    curves = {}
+    params0 = resnet.init_resnet18(jax.random.key(seed))
+    for name, (step, round_s) in schemes.items():
+        state = init_sl_state(spec, params0, opt)
+        tree = {"ue_params": state.ue_params, "bs_params": state.bs_params,
+                "opt_state_ue": state.opt_state_ue,
+                "opt_state_bs": state.opt_state_bs, "step": state.step}
+        jit_step = jax.jit(step)
+        gen_s = image_batches(batch, seed=seed)
+        curve = []
+        kk = k_run if name == "C2P2SL" else 1
+        for i in range(steps):
+            bt = next(gen_s)
+            xs, ys = shard_batch(bt["images"], bt["labels"], b_alloc, kk)
+            tree, mets = jit_step(tree, xs, ys)
+            if (i + 1) % eval_every == 0 or i == steps - 1:
+                merged = spec.merge_params(tree["ue_params"],
+                                           tree["bs_params"])
+                curve.append(((i + 1) * round_s, eval_acc(merged,
+                                                          test_batches)))
+        curves[name] = curve
+    return curves
+
+
+def main(quick=False):
+    curves = run(quick=quick)
+    print(f"{'scheme':>8s} {'final acc':>10s} {'sim time (s)':>13s}")
+    final = {}
+    for name, curve in curves.items():
+        t, acc = curve[-1]
+        final[name] = (acc, t)
+        print(f"{name:>8s} {acc:10.3f} {t:13.1f}")
+    # threshold time: first time reaching 90% of PSL's final accuracy
+    thr = 0.9 * final["PSL"][0]
+    t_at = {}
+    for name, curve in curves.items():
+        hit = [t for t, a in curve if a >= thr]
+        t_at[name] = min(hit) if hit else float("inf")
+    out = {"final": final, "t_at_threshold": t_at}
+    if np.isfinite(t_at["C2P2SL"]) and np.isfinite(t_at["PSL"]):
+        speedup = 1 - t_at["C2P2SL"] / t_at["PSL"]
+        print(f"time-to-{thr:.2f}-acc reduction vs PSL: {100*speedup:.1f}%")
+        out["tta_reduction_vs_psl"] = speedup
+    print(f"acc parity |C2P2SL - PSL| = "
+          f"{abs(final['C2P2SL'][0] - final['PSL'][0]):.4f} (exact updates)")
+    print(f"EPSL acc gap vs PSL = {final['PSL'][0] - final['EPSL'][0]:+.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

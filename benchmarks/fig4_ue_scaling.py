@@ -1,0 +1,42 @@
+"""Paper Fig. 4: training convergence time vs number of UEs.
+
+Claim: C2P2SL averages ~53% reduction vs PSL across UE counts, and the
+time is roughly constant in n (fixed total dataset).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import averaged
+
+UE_COUNTS = (4, 8, 12, 16)
+
+
+def run(seeds=range(8), quick=False):
+    seeds = range(3) if quick else seeds
+    rows = []
+    for n in UE_COUNTS:
+        r = averaged(n, seeds)
+        r["n"] = n
+        r["reduction_vs_psl"] = 1.0 - r["C2P2SL"] / r["PSL"]
+        rows.append(r)
+    avg_red = float(np.mean([r["reduction_vs_psl"] for r in rows]))
+    return rows, avg_red
+
+
+def main(quick=False):
+    rows, avg_red = run(quick=quick)
+    print(f"{'n':>3s} {'SL':>10s} {'PSL':>10s} {'EPSL':>10s} "
+          f"{'C2P2SL':>10s} {'vs PSL':>8s}")
+    for r in rows:
+        print(f"{r['n']:3d} {r['SL']:10.3f} {r['PSL']:10.3f} "
+              f"{r['EPSL']:10.3f} {r['C2P2SL']:10.3f} "
+              f"{100 * r['reduction_vs_psl']:7.1f}%")
+    print(f"average reduction vs PSL: {100 * avg_red:.1f}% "
+          f"(paper claims ~53%)")
+    return {"avg_reduction_vs_psl": avg_red,
+            "per_n": {r["n"]: r["reduction_vs_psl"] for r in rows}}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""§Perf hillclimb driver: lower one cell with optimization knobs, print
+the roofline terms and the top HLO contributors, and append the iteration
+to results/perf_iters.jsonl.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter \
+        --arch command-r-plus-104b --shape train_4k --label it1 \
+        --cast-gathers
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def run_cell(arch, shape, multi=False, *, pipeline_k=0, cast_gathers=False,
+             seq_shard=None, microbatches=1, master_fp32=False,
+             pure_dp=False, tpu_model=False, top_n=10):
+    from repro.launch.dryrun import lower_cell
+    from repro.analysis.hlo_costs import analyze
+    from repro.analysis.roofline import RooflineTerms
+    rec, comp = lower_cell(arch, shape, multi, pipeline_k=pipeline_k,
+                           cast_gathers=cast_gathers, seq_shard=seq_shard,
+                           microbatches=microbatches, master_fp32=master_fp32,
+                           pure_dp=pure_dp)
+    prof = analyze(comp.as_text(), top_n=top_n, tpu_model=tpu_model)
+    if tpu_model:
+        terms = RooflineTerms(
+            flops=prof["flops"], hbm_bytes=prof["bytes"],
+            coll_bytes=prof["coll_bytes"],
+            coll_by_kind=prof["coll_by_kind"],
+            coll_dcn_bytes=prof.get("coll_dcn_bytes", 0.0),
+            model_flops=rec["roofline"]["model_flops"],
+            chips=rec["chips"])
+        rec["roofline"] = terms.to_dict()
+    return rec, prof
+
+
+def show(rec, prof, label=""):
+    rl = rec["roofline"]
+    m = rec["memory"]
+    print(f"[{label}] {rec['arch']} x {rec['shape']} x {rec['mesh']}"
+          f"{' pipeline-k=' + str(rec['pipeline_k']) if rec['pipeline_k'] else ''}")
+    print(f"  t_compute {rl['t_compute_s']:.4f}s  t_memory "
+          f"{rl['t_memory_s']:.4f}s  t_coll(ici) {rl['t_collective_s']:.4f}s"
+          f"  t_coll(dcn) {rl.get('t_collective_dcn_s', 0.0):.4f}s"
+          f"  -> {rl['bottleneck']}")
+    print(f"  bound-MFU {rl['mfu_bound']:.3f}  useful/HLO "
+          f"{rl['useful_flops_frac']:.3f}  temp/dev "
+          f"{m['temp_bytes']/2**30:.2f} GiB")
+    if "top_coll" in prof:
+        print("  top collectives:")
+        for b, op, t, md in prof["top_coll"][:6]:
+            print(f"    {b/1e9:9.2f} GB  {op:19s} {t:34s} ...{md[-60:]}")
+        print("  top traffic:")
+        for b, op, t, md in prof["top_traffic"][:6]:
+            print(f"    {b/1e9:9.2f} GB  {op:19s} {t:34s} ...{md[-60:]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--pipeline-k", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--cast-gathers", action="store_true")
+    ap.add_argument("--master-fp32", action="store_true",
+                    help="bf16 model params + fp32 master in opt state")
+    ap.add_argument("--tpu-model", action="store_true",
+                    help="correct CPU-backend dtype/attention artifacts "
+                         "(native bf16 MXU + Pallas flash kernel)")
+    ap.add_argument("--pure-dp", action="store_true",
+                    help="ZeRO-3 pure data parallelism over all chips "
+                         "(attention-free regime)")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--label", default="iter")
+    ap.add_argument("--out", default="results/perf_iters.jsonl")
+    args = ap.parse_args()
+
+    seq = None
+    if args.no_seq_shard:
+        seq = False
+    if args.seq_shard:
+        seq = True
+    rec, prof = run_cell(args.arch, args.shape, args.mesh == "multi",
+                         pipeline_k=args.pipeline_k,
+                         cast_gathers=args.cast_gathers, seq_shard=seq,
+                         microbatches=args.microbatches,
+                         master_fp32=args.master_fp32,
+                         pure_dp=args.pure_dp,
+                         tpu_model=args.tpu_model)
+    show(rec, prof, args.label)
+    rec["label"] = args.label
+    rec["knobs"] = {"cast_gathers": args.cast_gathers, "seq_shard": seq,
+                    "pipeline_k": args.pipeline_k,
+                    "microbatches": args.microbatches,
+                    "master_fp32": args.master_fp32,
+                    "pure_dp": args.pure_dp,
+                    "tpu_model": args.tpu_model}
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

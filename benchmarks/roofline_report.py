@@ -1,0 +1,70 @@
+"""Render the dry-run's roofline records (results/dryrun.jsonl) as the
+EXPERIMENTS.md tables: per (arch x shape x mesh) the three terms, the
+bottleneck, and MODEL_FLOPS / HLO_FLOPs."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path="results/dryrun.jsonl"):
+    recs, skips = [], []
+    if not os.path.exists(path):
+        return recs, skips
+    seen = {}
+    for line in open(path):
+        r = json.loads(line)
+        if "skip" in r:
+            skips.append(r)
+        else:
+            key = (r["arch"], r["shape"], r["mesh"], r.get("pipeline_k", 0))
+            seen[key] = r          # newest record wins
+    recs = [seen[k] for k in sorted(seen)]
+    # dedupe skips
+    uniq = {(s["arch"], s["shape"]): s for s in skips}
+    return recs, list(uniq.values())
+
+
+def table(recs, mesh="16x16"):
+    lines = [
+        "| arch | shape | t_compute s | t_memory s | t_collective s | "
+        "bottleneck | bound-MFU | useful/HLO |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["mesh"] != mesh or r.get("pipeline_k"):
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['t_compute_s']:.4f} | "
+            f"{rl['t_memory_s']:.4f} | {rl['t_collective_s']:.4f} | "
+            f"{rl['bottleneck']} | {rl['mfu_bound']:.3f} | "
+            f"{rl['useful_flops_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def main(quick=False):
+    recs, skips = load()
+    if not recs:
+        print("no dry-run records; run: python -m repro.launch.dryrun")
+        return {}
+    n_single = sum(1 for r in recs if r["mesh"] == "16x16"
+                   and not r.get("pipeline_k"))
+    n_multi = sum(1 for r in recs if r["mesh"] == "2x16x16"
+                  and not r.get("pipeline_k"))
+    print(f"records: {n_single} single-pod + {n_multi} multi-pod cells, "
+          f"{len(skips)} documented skips")
+    print()
+    print(table(recs, "16x16"))
+    bnecks = {}
+    for r in recs:
+        if r["mesh"] == "16x16" and not r.get("pipeline_k"):
+            b = r["roofline"]["bottleneck"]
+            bnecks[b] = bnecks.get(b, 0) + 1
+    print(f"\nbottleneck distribution (single-pod): {bnecks}")
+    return {"cells": n_single + n_multi, "skips": len(skips),
+            "bottlenecks": bnecks}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark aggregator — one entry per paper table/figure.
+
+Prints ``name,seconds,derived`` CSV rows.  ``--full`` uses the paper-scale
+seeds/steps; the default quick mode keeps the whole suite CPU-friendly.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    from benchmarks import (ao_convergence, fig3_accuracy, fig4_ue_scaling,
+                            fig5_bandwidth, roofline_report)
+
+    rows = []
+
+    def bench(name, fn):
+        t0 = time.perf_counter()
+        print(f"=== {name} ===", flush=True)
+        out = fn(quick=quick)
+        dt = time.perf_counter() - t0
+        rows.append((name, dt, out))
+        print()
+
+    bench("fig4_ue_scaling", fig4_ue_scaling.main)
+    bench("fig5_bandwidth", fig5_bandwidth.main)
+    bench("ao_convergence", ao_convergence.main)
+    bench("fig3_accuracy", fig3_accuracy.main)
+    bench("roofline_report", roofline_report.main)
+
+    print("name,seconds,derived")
+    for name, dt, out in rows:
+        derived = ""
+        if isinstance(out, dict):
+            for k in ("avg_reduction_vs_psl", "min_reduction_vs_psl",
+                      "tta_reduction_vs_psl", "mean_bubble", "cells"):
+                if k in out:
+                    v = out[k]
+                    derived = f"{k}={v:.4f}" if isinstance(v, float) \
+                        else f"{k}={v}"
+                    break
+        print(f"{name},{dt:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Quickstart: end-to-end training of a small decoder LM with the framework.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 200]
+
+Uses the public API end to end: config -> model -> optimizer -> micro-batched
+train step (the paper's k-micro-batch gradient accumulation) -> checkpointing
+-> restart.  The synthetic affine-chain token task is learnable, so the loss
+falls well below the 6.2-nat random floor within a couple hundred steps.
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import TokenTaskConfig, token_batches
+from repro.models import LM, LMConfig
+from repro.parallel.steps import make_lm_train_step
+from repro.training import adamw, checkpoint, cosine_schedule
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=4,
+                    help="the paper's k (gradient accumulation)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_quickstart")
+    args = ap.parse_args()
+
+    cfg = LMConfig(name="quickstart-20m", num_layers=4, d_model=256,
+                   n_heads=8, n_kv=4, d_ff=1024, vocab=2048,
+                   dtype="float32")
+    model = LM(cfg)
+    params = model.init(jax.random.key(0))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name}  {n_params/1e6:.1f}M params")
+
+    opt = adamw(cosine_schedule(3e-3, warmup=20, total=args.steps),
+                grad_clip=1.0)
+    state = {"params": params, "opt_state": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+
+    # fault-tolerant restart: pick up the newest checkpoint if present
+    last = checkpoint.latest_step(args.ckpt_dir)
+    if last is not None:
+        state = checkpoint.restore(args.ckpt_dir, last, state)
+        print(f"resumed from checkpoint step {last}")
+
+    step_fn = jax.jit(make_lm_train_step(model, opt,
+                                         microbatches=args.microbatches))
+    data = token_batches(TokenTaskConfig(vocab=cfg.vocab), args.batch,
+                         args.seq, seed=0)
+
+    t0 = time.perf_counter()
+    first_loss = None
+    for i in range(int(state["step"]), args.steps):
+        state, mets = step_fn(state, next(data))
+        if first_loss is None:
+            first_loss = float(mets["loss"])
+        if (i + 1) % 25 == 0:
+            print(f"step {i+1:4d}  loss {float(mets['loss']):.4f}  "
+                  f"({time.perf_counter()-t0:.1f}s)", flush=True)
+        if (i + 1) % 100 == 0:
+            checkpoint.save(args.ckpt_dir, i + 1, state)
+            checkpoint.prune(args.ckpt_dir)
+
+    final = float(mets["loss"])
+    print(f"\nloss: {first_loss:.3f} -> {final:.3f} "
+          f"(random floor ~{jnp.log(jnp.asarray(float(cfg.vocab))):.2f})")
+    assert final < first_loss, "training did not reduce the loss"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Batched serving example: prefill + decode with the KV/recurrent-state
+serve path (the decode_32k / long_500k dry-run shapes, laptop scale).
+
+    PYTHONPATH=src python examples/serve_batch.py --arch rwkv6-3b
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-3b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--size", "smoke",
+                "--batch", str(args.batch), "--prompt-len", "16",
+                "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""The paper's scenario end to end: heterogeneous UEs + BS over a TDMA
+cellular channel, joint (l, k, b, tau) optimization, then REAL C2P2SL split
+training of ResNet-18 vs the PSL baseline.
+
+    PYTHONPATH=src python examples/wireless_sl.py [--steps 60] [--ues 8]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core import algorithm1, resnet18_profile
+from repro.core.schedule import Plan, simulate_c2p2sl, simulate_psl, task_times
+from repro.data import image_batches
+from repro.models import resnet
+from repro.sl import (init_sl_state, make_c2p2sl_step, make_psl_step,
+                      resnet_split, shard_batch)
+from repro.training import sgd
+from repro.wireless import sample_fleet
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--ues", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    prof = resnet18_profile()
+    fleet = sample_fleet(args.ues, seed=args.seed)
+    r_u, r_d = fleet.rates()
+    print(f"fleet: {args.ues} UEs, uplink {r_u.min()/1e6:.0f}-"
+          f"{r_u.max()/1e6:.0f} Mb/s, clocks "
+          f"{fleet.ue_flops.min()/16e9:.2f}-{fleet.ue_flops.max()/16e9:.2f} "
+          f"Gcycle/s")
+
+    # --- Algorithm 1: joint split & allocation ---
+    res = algorithm1(prof, fleet, batch=512)
+    plan = res.plan
+    print(f"AO plan: cut l={plan.l} ({prof.layer_names[plan.l-1]}), "
+          f"k={plan.k} micro-batches, bubble rate {res.bubble:.3f}")
+    print(f"  batch split: {plan.b.astype(int).tolist()}")
+
+    t = task_times(prof, fleet, plan)
+    ms_c2p2, _ = simulate_c2p2sl(t, plan.k)
+    uni = Plan(l=plan.l, k=1, b=np.full(args.ues, 512 / args.ues),
+               tau=np.full(args.ues, fleet.channel.frame_s / args.ues))
+    ms_psl = simulate_psl(task_times(prof, fleet, uni))
+    print(f"simulated batch time: C2P2SL {ms_c2p2:.3f}s vs PSL {ms_psl:.3f}s "
+          f"(-{100*(1-ms_c2p2/ms_psl):.1f}%)")
+
+    # --- real split training on the synthetic CIFAR-10 stand-in ---
+    spec = resnet_split(plan.l)
+    opt = sgd(0.05, momentum=0.9)
+    params = resnet.init_resnet18(jax.random.key(args.seed))
+    # scale the AO batch split to the demo batch, as multiples of k so
+    # C2P2SL (micro-batched) and PSL see IDENTICAL samples (the paper's
+    # equivalence requires equal effective batches)
+    b_prop = np.maximum(1, np.round(
+        plan.b / plan.b.sum() * args.batch)).astype(int)
+    k = 1
+    for cand in (8, 4, 2):
+        if args.batch % cand == 0 and cand <= min(plan.k, b_prop.min()):
+            k = cand
+            break
+    b_alloc = np.maximum(k, (b_prop // k) * k)
+    while b_alloc.sum() > args.batch:
+        b_alloc[np.argmax(b_alloc)] -= k
+    while b_alloc.sum() < args.batch:
+        b_alloc[np.argmin(b_alloc)] += k
+
+    for name, maker, kk, per_batch in (
+            ("C2P2SL", lambda: make_c2p2sl_step(spec, opt, k=k), k, ms_c2p2),
+            ("PSL", lambda: make_psl_step(spec, opt), 1, ms_psl)):
+        state = init_sl_state(spec, params, opt)
+        tree = {"ue_params": state.ue_params, "bs_params": state.bs_params,
+                "opt_state_ue": state.opt_state_ue,
+                "opt_state_bs": state.opt_state_bs, "step": state.step}
+        step = jax.jit(maker())
+        gen = image_batches(args.batch, seed=args.seed)
+        for i in range(args.steps):
+            bt = next(gen)
+            xs, ys = shard_batch(bt["images"], bt["labels"], b_alloc, kk)
+            tree, mets = step(tree, xs, ys)
+        merged = spec.merge_params(tree["ue_params"], tree["bs_params"])
+        test = next(image_batches(256, seed=4242))
+        acc = float((resnet.forward(merged, test["images"]).argmax(-1)
+                     == test["labels"]).mean())
+        print(f"{name:7s}: acc {acc:.3f} after {args.steps} rounds "
+              f"~ {args.steps * per_batch:.0f}s simulated wall time")
+    print("(per-step updates are identical to ~1e-7 — "
+          "tests/test_equivalence.py; short-run accuracies drift by fp "
+          "trajectory divergence, converging to parity as in Fig 3)")
+
+
+if __name__ == "__main__":
+    main()

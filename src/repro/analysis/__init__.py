@@ -1,0 +1,2 @@
+from repro.analysis.roofline import (RooflineTerms, collective_bytes_from_hlo,
+                                     roofline_from_compiled, HW)

@@ -1,0 +1,203 @@
+"""Roofline terms from a compiled dry-run artifact (no real hardware).
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / link_bw            (per-chip bytes)
+
+``cost_analysis()`` on the compiled executable reports the per-device
+(SPMD-partitioned) program, so FLOPs/bytes are per-chip; dividing by the
+per-chip peaks gives the same seconds as the global form divided by
+(chips x peak).  Collective bytes are parsed from the partitioned HLO text:
+the result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (all-reduce counted twice — a
+ring all-reduce moves 2N bytes per device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+# TPU v5e hardware constants (per chip).
+HW = {
+    "peak_flops_bf16": 197e12,      # FLOP/s
+    "hbm_bw": 819e9,                # B/s
+    "ici_bw": 50e9,                 # B/s per link
+    "dcn_bw": 3.1e9,                # B/s per chip across pods (hosts share
+                                    # ~200 Gb/s NICs over 8 chips)
+    "hbm_bytes": 16 * 1024 ** 3,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+# e.g.  %all-gather.5 = bf16[2,16,4096]{2,1,0} all-gather(%p), ...
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-collective-kind result bytes from (partitioned) HLO text."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        tuple_body, dtype, dims, kind = m.group(1), m.group(2), m.group(3), \
+            m.group(4)
+        if tuple_body is not None:
+            nb = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(tuple_body))
+        else:
+            nb = _shape_bytes(dtype, dims)
+        out[kind] += nb
+    return out
+
+
+def weighted_collective_bytes(by_kind: dict) -> float:
+    """Link bytes per chip: ring all-reduce moves ~2N; others ~N."""
+    return (2.0 * by_kind["all-reduce"] + by_kind["all-gather"]
+            + by_kind["reduce-scatter"] + by_kind["all-to-all"]
+            + by_kind["collective-permute"])
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per-chip HLO FLOPs
+    hbm_bytes: float             # per-chip HLO bytes accessed
+    coll_bytes: float            # per-chip link bytes (weighted)
+    coll_by_kind: dict
+    model_flops: float           # 6*N*D useful flops (global)
+    chips: int
+    coll_dcn_bytes: float = 0.0  # subset of coll_bytes crossing pods
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / HW["peak_flops_bf16"]
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HW["hbm_bw"]
+
+    @property
+    def t_collective(self) -> float:
+        """ICI term; inter-pod traffic is billed at DCN bandwidth."""
+        ici = (self.coll_bytes - self.coll_dcn_bytes) / HW["ici_bw"]
+        return max(ici, 0.0)
+
+    @property
+    def t_collective_dcn(self) -> float:
+        return self.coll_dcn_bytes / HW["dcn_bw"]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective,
+                 "collective-dcn": self.t_collective_dcn}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Lower-bound step time if the terms fully overlap."""
+        return max(self.t_compute, self.t_memory, self.t_collective,
+                   self.t_collective_dcn)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs (catches remat/redundancy)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOP utilisation at the roofline bound."""
+        if self.t_bound <= 0:
+            return 0.0
+        return (self.model_flops
+                / (self.chips * HW["peak_flops_bf16"] * self.t_bound))
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "coll_dcn_bytes_per_chip": self.coll_dcn_bytes,
+            "coll_by_kind": self.coll_by_kind,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "t_collective_dcn_s": self.t_collective_dcn,
+            "bottleneck": self.bottleneck,
+            "t_bound_s": self.t_bound,
+            "useful_flops_frac": self.useful_flops_frac,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def roofline_from_compiled(compiled, *, chips: int, model_flops: float,
+                           hlo_text: str | None = None) -> RooflineTerms:
+    """Derive the three terms from a compiled (dry-run) executable.
+
+    ``cost_analysis()`` counts while-loop bodies once (wrong by ~num_layers
+    for a scanned transformer — verified in EXPERIMENTS.md), so the terms
+    come from the trip-count-aware static analyzer over the partitioned HLO
+    text (repro.analysis.hlo_costs); the flat cost_analysis numbers are
+    retained in the record for reference.
+    """
+    from repro.analysis import hlo_costs
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    res = hlo_costs.analyze(text)
+    return RooflineTerms(
+        flops=res["flops"],
+        hbm_bytes=res["bytes"],
+        coll_bytes=res["coll_bytes"],
+        coll_by_kind=res["coll_by_kind"],
+        coll_dcn_bytes=res.get("coll_dcn_bytes", 0.0),
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per step.
+
+    For decode shapes D = global_batch tokens (one token per sequence);
+    for train/prefill D = global_batch x seq_len.  Inference (prefill,
+    decode) has no backward pass: 2*N*D instead of 6*N*D.
+    """
+    n = cfg.param_count()
+    if cfg.is_moe:
+        # subtract inactive expert params: each MoE layer holds E experts,
+        # only topk are active per token
+        d, f = cfg.d_model, cfg.d_ff
+        per_expert = 3 * d * f
+        n_moe_layers = sum(1 for k in cfg.layer_kinds if k in ("attn", "local"))
+        n = n - n_moe_layers * (cfg.moe_experts - cfg.moe_topk) * per_expert
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:
+        tokens = shape.global_batch
+        mult = 2.0
+    return mult * n * tokens

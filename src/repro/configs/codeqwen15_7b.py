@@ -1,0 +1,37 @@
+"""codeqwen1.5-7b [dense] — 32L d_model=4096 32H (GQA kv=32) d_ff=13440
+vocab=92416, qwen1.5-arch (QKV bias) [hf:Qwen/CodeQwen1.5-7B]."""
+from repro.configs.base import ArchSpec, full_attn_skips
+from repro.models.config import LMConfig
+
+FULL = LMConfig(
+    name="codeqwen1.5-7b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv=32,
+    d_ff=13440,
+    vocab=92_416,
+    qkv_bias=True,
+    act="silu",
+    norm="rmsnorm",
+    rope_theta=1_000_000.0,
+)
+
+SMOKE = LMConfig(
+    name="codeqwen1.5-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv=4,
+    d_ff=192,
+    vocab=512,
+    qkv_bias=True,
+    act="silu",
+    norm="rmsnorm",
+    dtype="float32",
+)
+
+SPEC = ArchSpec(name="codeqwen1.5-7b", full=FULL, smoke=SMOKE,
+                skips=full_attn_skips())

@@ -1,0 +1,43 @@
+"""command-r-plus-104b [dense] — 64L d_model=12288 96H (GQA kv=8)
+d_ff=33792 vocab=256000, no-bias [hf:CohereForAI/c4ai-command-r-v01].
+
+The flagship memory-pressure arch: at 104B parameters the balanced 2-stage
+C2P2SL split is what makes the multi-pod mesh fit (DESIGN.md §6).
+"""
+from repro.configs.base import ArchSpec, full_attn_skips
+from repro.models.config import LMConfig
+
+FULL = LMConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    num_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv=8,
+    d_ff=33792,
+    vocab=256_000,
+    act="silu",
+    norm="layernorm",
+    mlp_gated=True,
+    rope_theta=75_000_000.0,
+    tie_embeddings=True,     # command-r family ties input/output embeddings
+)
+
+SMOKE = LMConfig(
+    name="command-r-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=96,
+    n_heads=6,
+    n_kv=2,
+    d_ff=256,
+    vocab=512,
+    act="silu",
+    norm="layernorm",
+    mlp_gated=True,
+    tie_embeddings=True,
+    dtype="float32",
+)
+
+SPEC = ArchSpec(name="command-r-plus-104b", full=FULL, smoke=SMOKE,
+                skips=full_attn_skips())

@@ -1,0 +1,47 @@
+"""paligemma-3b [vlm] — gemma-2b backbone: 18L d_model=2048 8H (GQA kv=1,
+head_dim=256) d_ff=16384 vocab=257216 [arXiv:2407.07726].
+
+The SigLIP vision tower is a STUB per the assignment: ``input_specs()``
+provides 256 precomputed patch embeddings which are prepended to the token
+sequence with bidirectional (prefix-LM) masking.
+"""
+from repro.configs.base import ArchSpec, full_attn_skips
+from repro.models.config import LMConfig
+
+FULL = LMConfig(
+    name="paligemma-3b",
+    family="vlm",
+    num_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab=257_216,
+    num_patches=256,
+    act="gelu",
+    norm="rmsnorm",
+    embed_scale=True,
+    tie_embeddings=True,
+)
+
+SMOKE = LMConfig(
+    name="paligemma-smoke",
+    family="vlm",
+    num_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv=1,
+    head_dim=16,
+    d_ff=256,
+    vocab=512,
+    num_patches=8,
+    act="gelu",
+    norm="rmsnorm",
+    embed_scale=True,
+    tie_embeddings=True,
+    dtype="float32",
+)
+
+SPEC = ArchSpec(name="paligemma-3b", full=FULL, smoke=SMOKE,
+                skips=full_attn_skips())

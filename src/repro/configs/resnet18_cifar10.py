@@ -1,0 +1,20 @@
+"""resnet18-cifar10 — the paper's own experimental model (SIV-A, Table II).
+
+Not part of the assigned LM pool; this is the faithful-reproduction config
+used by the wireless C2P2SL runtime, benchmarks (Fig 3/4/5) and the
+equivalence tests.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet18-cifar10"
+    num_classes: int = 10
+    image_size: int = 32
+    batch: int = 512             # paper Table I: b = 512
+    cut_units: int = 6           # Table II rows (conv1, block1..4, pool+fc)
+
+
+FULL = ResNetConfig()
+SMOKE = ResNetConfig(name="resnet18-smoke", batch=32)

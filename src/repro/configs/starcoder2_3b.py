@@ -1,0 +1,44 @@
+"""starcoder2-3b [dense] — 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152, GQA + RoPE [arXiv:2402.19173].
+
+starcoder2 uses layernorm + non-gated gelu MLP with biases everywhere.
+"""
+from repro.configs.base import ArchSpec, full_attn_skips
+from repro.models.config import LMConfig
+
+FULL = LMConfig(
+    name="starcoder2-3b",
+    family="dense",
+    num_layers=30,
+    d_model=3072,
+    n_heads=24,
+    n_kv=2,
+    d_ff=12288,
+    vocab=49_152,
+    act="gelu",
+    norm="layernorm",
+    mlp_gated=False,
+    mlp_bias=True,
+    qkv_bias=True,
+    rope_theta=100_000.0,
+)
+
+SMOKE = LMConfig(
+    name="starcoder2-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv=2,
+    d_ff=256,
+    vocab=512,
+    act="gelu",
+    norm="layernorm",
+    mlp_gated=False,
+    mlp_bias=True,
+    qkv_bias=True,
+    dtype="float32",
+)
+
+SPEC = ArchSpec(name="starcoder2-3b", full=FULL, smoke=SMOKE,
+                skips=full_attn_skips())

@@ -1,0 +1,66 @@
+"""whisper-small [audio] — enc-dec: 12L decoder d_model=768 12H (kv=12)
+d_ff=3072 vocab=51865, conv frontend STUB [arXiv:2212.04356].
+
+``input_specs()`` provides 1500 precomputed frame embeddings (the output of
+the stub conv frontend) consumed by a 12-layer bidirectional encoder; the
+12 decoder layers interleave self- and cross-attention ("xattn" blocks).
+
+vocab 51865 is padded to 51872 (x16) for embedding sharding — the only
+padded dimension in the zoo (DESIGN.md §7).
+
+Skips: whisper's decoder context is architecturally 448, so long_500k does
+not exist for this family; decode_32k is lowered as specified (32k decode
+against the fixed 1500-frame encoder memory) per the assignment note.
+"""
+from repro.configs.base import (ArchSpec, WHISPER_LONG_SKIP, no_skips)
+from repro.models.config import LMConfig
+
+FULL = LMConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv=12,
+    d_ff=3072,
+    vocab=51_865,
+    vocab_pad_multiple=16,
+    pattern=("xattn",) * 12,
+    enc_layers=12,
+    enc_seq=1500,
+    act="gelu",
+    norm="layernorm",
+    mlp_gated=False,
+    mlp_bias=True,
+    qkv_bias=True,
+    tie_embeddings=False,
+)
+
+SMOKE = LMConfig(
+    name="whisper-smoke",
+    family="audio",
+    num_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv=4,
+    d_ff=128,
+    vocab=512,
+    pattern=("xattn",) * 2,
+    enc_layers=2,
+    enc_seq=16,
+    act="gelu",
+    norm="layernorm",
+    mlp_gated=False,
+    mlp_bias=True,
+    qkv_bias=True,
+    dtype="float32",
+)
+
+
+def _skips():
+    d = no_skips()
+    d["long_500k"] = WHISPER_LONG_SKIP
+    return d
+
+
+SPEC = ArchSpec(name="whisper-small", full=FULL, smoke=SMOKE, skips=_skips())

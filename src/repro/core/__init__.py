@@ -1,0 +1,6 @@
+"""Core contribution of the paper: C2P2SL scheduling + joint optimization."""
+from repro.core.costs import LayerProfile, lm_profile, resnet18_profile
+from repro.core.schedule import (Plan, TaskTimes, bubble_rate, simulate_c2p2sl,
+                                 simulate_epsl, simulate_psl, simulate_sl,
+                                 steady_state_ok, task_times)
+from repro.core.ao import AOResult, algorithm1, lemma1_k

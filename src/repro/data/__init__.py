@@ -1,0 +1,2 @@
+from repro.data.synthetic import (token_batches, image_batches,
+                                  lm_batch_for, TokenTaskConfig)

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the zoo's compute hot-spots.
+
+The paper itself contributes no kernels (its insight is a schedule);
+these cover the hot loops of the ASSIGNED architectures, each with an
+explicit BlockSpec VMEM tiling, a jit'd wrapper (ops.py) and a pure-jnp
+oracle (ref.py) asserted allclose in tests/test_kernels.py:
+
+  flash_attention.py  blocked online-softmax attention (GQA via index map)
+  rglru.py            fused RG-LRU linear recurrence (recurrentgemma)
+  rwkv6.py            chunked data-dependent-decay WKV as MXU matmuls
+  moe_gmm.py          grouped expert matmul with f32 VMEM accumulator
+
+On CPU (this container) the wrappers run interpret=True; on a TPU backend
+the same calls compile to Mosaic.
+"""
+from repro.kernels import ops
+from repro.kernels import ref

@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention (forward): blocked online softmax.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — kv minor, so each (b, h, i)
+program sequence walks kv blocks left to right accumulating the online
+softmax in VMEM scratch; the output block is written on the last kv step.
+
+BlockSpecs keep one (bq, dh) query tile, one (bk, dh) key/value tile, and
+the f32 accumulator in VMEM.  GQA is handled in the index map (kv head =
+q head // group), so grouped K/V are never materialized per q-head.
+Causal and sliding-window masking are positional (no mask tensor in HBM).
+
+The MXU sees two matmuls per tile: [bq, dh] @ [dh, bk] and [bq, bk] @
+[bk, dh] — both dims multiples of 128 for the production block sizes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int, bq: int, bk: int,
+                  n_kv: int):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # [bq, dh]
+    k = k_ref[0, 0].astype(jnp.float32)                # [bk, dh]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = q @ k.T                                        # [bq, bk]
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                # [bq]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0, 0, ...] = (acc_ref[...]
+                            / jnp.maximum(l, 1e-30)[:, None]
+                            ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False):
+    """q: [B, Hq, Sq, dh]; k, v: [B, Hkv, Skv, dh] -> [B, Hq, Sq, dh]."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    rep = hq // hkv
+    bq_ = min(bq, sq)
+    bk_ = min(bk, skv)
+    assert sq % bq_ == 0 and skv % bk_ == 0, (sq, skv, bq_, bk_)
+    n_q = sq // bq_
+    n_kv = skv // bk_
+    scale = 1.0 / math.sqrt(dh)
+
+    grid = (b, hq, n_q, n_kv)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq_, bk=bk_, n_kv=n_kv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq_, dh), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk_, dh),
+                         lambda b_, h, i, j, rep=rep: (b_, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk_, dh),
+                         lambda b_, h, i, j, rep=rep: (b_, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq_, dh),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, dh), jnp.float32),   # online-softmax acc
+            pltpu.VMEM((bq_,), jnp.float32),      # running max m
+            pltpu.VMEM((bq_,), jnp.float32),      # running denom l
+        ],
+        interpret=interpret,
+    )(q, k, v)

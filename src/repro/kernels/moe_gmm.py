@@ -1,0 +1,61 @@
+"""Pallas TPU grouped matmul for MoE expert compute.
+
+h [E, C, D] @ w [E, D, F] -> [E, C, F]: one MXU matmul per (expert,
+capacity-block, f-block) grid cell, accumulating over D blocks in a f32
+VMEM scratch tile.  Grid: (E, C/bc, F/bf, D/bd) — D minor so the
+accumulator persists across the contraction steps.
+
+This is the dispatch-side hot loop of ``repro.models.moe`` (the capacity-
+bucketed expert forward); block shapes are MXU-aligned (128 multiples).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BC = 128
+DEFAULT_BF = 128
+DEFAULT_BD = 512
+
+
+def _gmm_kernel(h_ref, w_ref, o_ref, acc_ref, *, n_d: int):
+    d = pl.program_id(3)
+
+    @pl.when(d == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    h = h_ref[0].astype(jnp.float32)          # [bc, bd]
+    w = w_ref[0].astype(jnp.float32)          # [bd, bf]
+    acc_ref[...] += h @ w
+
+    @pl.when(d == n_d - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gmm(h, w, *, bc: int = DEFAULT_BC, bf: int = DEFAULT_BF,
+            bd: int = DEFAULT_BD, interpret: bool = False):
+    """h: [E, C, D], w: [E, D, F] -> [E, C, F]."""
+    e, c, d = h.shape
+    _, _, f = w.shape
+    bc_, bf_, bd_ = min(bc, c), min(bf, f), min(bd, d)
+    assert c % bc_ == 0 and f % bf_ == 0 and d % bd_ == 0, (c, f, d)
+    grid = (e, c // bc_, f // bf_, d // bd_)
+    kernel = functools.partial(_gmm_kernel, n_d=d // bd_)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc_, bd_), lambda e_, i, j, k: (e_, i, k)),
+            pl.BlockSpec((1, bd_, bf_), lambda e_, i, j, k: (e_, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc_, bf_), lambda e_, i, j, k: (e_, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), h.dtype),
+        scratch_shapes=[pltpu.VMEM((bc_, bf_), jnp.float32)],
+        interpret=interpret,
+    )(h, w)

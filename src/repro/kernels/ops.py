@@ -1,0 +1,46 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) every kernel runs in ``interpret=True`` mode —
+the kernel body executes as traced JAX ops, which is what the tests
+validate against the ``ref.py`` oracles.  On a real TPU backend the same
+calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import moe_gmm as _gmm
+from repro.kernels import rglru as _rglru
+from repro.kernels import rwkv6 as _rwkv6
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B,Hq,S,dh], k/v [B,Hkv,S,dh] -> [B,Hq,S,dh]."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=_interpret())
+
+
+@jax.jit
+def rglru_scan(x_gated, log_a, h0=None):
+    """[B,S,R] fused RG-LRU -> (h [B,S,R], h_last [B,R])."""
+    return _rglru.rglru_scan(x_gated, log_a, h0, interpret=_interpret())
+
+
+@jax.jit
+def wkv6(r, k, v, w, u, s0=None):
+    """[B,S,H,dh] chunked WKV6 -> (out, final_state [B,H,dh,dh])."""
+    return _rwkv6.wkv6(r, k, v, w, u, s0, interpret=_interpret())
+
+
+@jax.jit
+def moe_gmm(h, w):
+    """Grouped matmul h [E,C,D] @ w [E,D,F] -> [E,C,F]."""
+    return _gmm.moe_gmm(h, w, interpret=_interpret())

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors one kernel's semantics exactly; tests sweep shapes
+and dtypes asserting allclose between kernel (interpret=True on CPU) and
+these references.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B,Hq,S,dh], k/v [B,Hkv,S,dh] — dense softmax attention."""
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    qg = q.reshape(b, hkv, rep, sq, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkrqd,bksd->bkrqs", qg, kf) / math.sqrt(dh)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrqs,bksd->bkrqd", p, vf)
+    return o.reshape(b, hq, sq, dh).astype(q.dtype)
+
+
+def rg_lru_ref(x_gated, log_a, h0=None):
+    """Sequential RG-LRU: h_t = a_t h_{t-1} + sqrt(1-a_t^2) x_t."""
+    b, s, r = x_gated.shape
+    h = jnp.zeros((b, r), jnp.float32) if h0 is None else \
+        h0.astype(jnp.float32)
+    a = jnp.exp(log_a.astype(jnp.float32))
+    bx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * x_gated.astype(jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    hs_final, hs = jax.lax.scan(
+        step, h, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(bx, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(x_gated.dtype), hs_final
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """Step-by-step WKV6 (same semantics as models.rwkv.wkv6_scan)."""
+    from repro.models.rwkv import wkv6_scan
+    return wkv6_scan(r, k, v, w, u, s0=s0)
+
+
+def moe_gmm_ref(h, w):
+    """Grouped matmul: h [E, C, D] @ w [E, D, F] -> [E, C, F]."""
+    return jnp.einsum("ecd,edf->ecf", h.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(h.dtype)

@@ -1,0 +1,88 @@
+"""Pallas TPU RG-LRU scan: fused single-HBM-pass linear recurrence.
+
+The RG-LRU is elementwise (VPU work, memory-bound): the kernel's job is to
+stream [S, R] once through VMEM instead of XLA's multi-pass log-depth
+associative scan.  Grid: (batch, r_blocks, chunks) — chunks minor, so the
+carry h lives in VMEM scratch across sequential chunk steps; inside a chunk
+a fori_loop advances ``chunk`` time steps on a [r_block] vector held in
+registers/VMEM.
+
+Block sizes: chunk x r_block tiles of the [B, S, R] inputs; r_block is a
+lane multiple (128) so the VPU is fully occupied.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 256
+DEFAULT_RBLOCK = 128
+
+
+def _rglru_kernel(x_ref, la_ref, h0_ref, h_out_ref, hlast_ref, h_ref, *,
+                  chunk: int, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)        # [chunk, rb]
+    la = la_ref[0].astype(jnp.float32)
+    a = jnp.exp(la)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * x
+
+    def step(t, carry):
+        h, out = carry
+        h = a[t] * h + b[t]
+        out = jax.lax.dynamic_update_index_in_dim(out, h, t, 0)
+        return h, out
+
+    h0 = h_ref[...]
+    h_fin, outs = jax.lax.fori_loop(
+        0, chunk, step, (h0, jnp.zeros((chunk, x.shape[1]), jnp.float32)))
+    h_ref[...] = h_fin
+    h_out_ref[0] = outs.astype(h_out_ref.dtype)
+
+    @pl.when(c == n_chunks - 1)
+    def _last():
+        hlast_ref[0] = h_fin.astype(hlast_ref.dtype)
+
+
+def rglru_scan(x_gated, log_a, h0=None, *, chunk: int = DEFAULT_CHUNK,
+               r_block: int = DEFAULT_RBLOCK, interpret: bool = False):
+    """x_gated, log_a: [B, S, R] -> (h [B, S, R], h_last [B, R])."""
+    b, s, r = x_gated.shape
+    chunk = min(chunk, s)
+    r_block = min(r_block, r)
+    assert s % chunk == 0 and r % r_block == 0, (s, r, chunk, r_block)
+    n_chunks = s // chunk
+    if h0 is None:
+        h0 = jnp.zeros((b, r), x_gated.dtype)
+
+    grid = (b, r // r_block, n_chunks)
+    kernel = functools.partial(_rglru_kernel, chunk=chunk, n_chunks=n_chunks)
+    h_all, h_last = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, r_block), lambda b_, rb, c: (b_, c, rb)),
+            pl.BlockSpec((1, chunk, r_block), lambda b_, rb, c: (b_, c, rb)),
+            pl.BlockSpec((1, r_block), lambda b_, rb, c: (b_, rb)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, r_block), lambda b_, rb, c: (b_, c, rb)),
+            pl.BlockSpec((1, r_block), lambda b_, rb, c: (b_, rb)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, r), x_gated.dtype),
+            jax.ShapeDtypeStruct((b, r), x_gated.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((r_block,), jnp.float32)],
+        interpret=interpret,
+    )(x_gated, log_a, h0)
+    return h_all, h_last

@@ -1,0 +1,109 @@
+"""Pallas TPU chunked WKV6: the RWKV6 recurrence as MXU matmuls.
+
+Same math as ``repro.models.rwkv.wkv6_chunked`` (the oracle): the sequence
+is cut into chunks of C; within a chunk the data-dependent-decay recurrence
+becomes a lower-triangular [C, C] attention-like product (two MXU matmuls)
+plus a state term; the [dh, dh] state advances once per chunk.
+
+Grid: (batch, heads, chunks) — chunks minor; the f32 state matrix lives in
+VMEM scratch across the sequential chunk steps.  Block shapes: [C, dh]
+tiles for r/k/v/w and a [dh, dh] state tile; with C = dh = 64..128 the
+matmuls are MXU-shaped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sout_ref,
+                 s_ref, *, chunk: int, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    rc = r_ref[0, 0, 0].astype(jnp.float32)    # [C, dh]
+    kc = k_ref[0, 0, 0].astype(jnp.float32)
+    vc = v_ref[0, 0, 0].astype(jnp.float32)
+    wc = w_ref[0, 0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)           # [dh]
+
+    logw = jnp.log(jnp.maximum(wc, 1e-30))
+    lcum = jnp.cumsum(logw, axis=0)            # L_{t+1}
+    l_t = lcum - logw                          # L_t (exclusive cumsum)
+    l_total = lcum[-1:]                        # L_C  [1, dh]
+    m = 0.5 * l_total
+
+    r_t = rc * jnp.exp(l_t - m)
+    k_j = kc * jnp.exp(m - lcum)
+    att = r_t @ k_j.T                          # [C, C] (MXU)
+    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+    att = att * causal
+    diag = jnp.sum(rc * (u[None] * kc), axis=1)  # [C]
+    state = s_ref[...]
+    o = att @ vc + diag[:, None] * vc \
+        + (rc * jnp.exp(l_t)) @ state          # [C, dh] (MXU)
+
+    k_hat = kc * jnp.exp(l_total - lcum)
+    s_ref[...] = jnp.exp(l_total[0])[:, None] * state + k_hat.T @ vc
+    o_ref[0, 0, 0] = o.astype(o_ref.dtype)
+
+    @pl.when(c == n_chunks - 1)
+    def _last():
+        sout_ref[0, 0] = s_ref[...].astype(sout_ref.dtype)
+
+
+def wkv6(r, k, v, w, u, s0=None, *, chunk: int = DEFAULT_CHUNK,
+         interpret: bool = False):
+    """r,k,v,w: [B, S, H, dh]; u: [H, dh]; s0: [B, H, dh, dh] f32.
+
+    Returns (out [B, S, H, dh], final_state [B, H, dh, dh] f32).
+    """
+    b, s, h, dh = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+
+    # [B, S, H, dh] -> [B, H, n_chunks, C, dh] block-friendly layout
+    def prep(a):
+        return jnp.moveaxis(a, 2, 1).reshape(b, h, n_chunks, chunk, dh)
+
+    rs, ks, vs, ws = map(prep, (r, k, v, w))
+
+    grid = (b, h, n_chunks)
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, n_chunks=n_chunks)
+    o, s_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, dh),
+                         lambda b_, h_, c: (b_, h_, c, 0, 0))
+            for _ in range(4)
+        ] + [
+            pl.BlockSpec((1, dh), lambda b_, h_, c: (h_, 0)),
+            pl.BlockSpec((1, 1, dh, dh), lambda b_, h_, c: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, dh),
+                         lambda b_, h_, c: (b_, h_, c, 0, 0)),
+            pl.BlockSpec((1, 1, dh, dh), lambda b_, h_, c: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, n_chunks, chunk, dh), r.dtype),
+            jax.ShapeDtypeStruct((b, h, dh, dh), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(rs, ks, vs, ws, u, s0)
+    o = jnp.moveaxis(o.reshape(b, h, s, dh), 1, 2)
+    return o, s_out

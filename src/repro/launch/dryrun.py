@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # CPU-only pass that crashes on the SPMD partitioner's replicate-as-
+    # last-resort all-reduce (reduction computation = copy).  The pass does
+    # not exist on the TPU target; disabling it only affects this CPU
+    # dry-run's bf16 all-reduce numerics, which we never execute.
+    "--xla_disable_hlo_passes=all-reduce-promotion")
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+compiles, and fits — without any real hardware.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. assembles ShapeDtypeStruct stand-ins for every step input,
+  3. ``jax.jit(step, in_shardings=..., out_shardings=...).lower(...)``
+     then ``.compile()``,
+  4. prints ``memory_analysis()`` (fits?) and ``cost_analysis()`` (FLOPs /
+     bytes for §Roofline), plus the HLO-parsed collective bytes,
+  5. appends a JSON record to ``--out`` for EXPERIMENTS.md / benchmarks.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun.jsonl
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.roofline import model_flops_for, roofline_from_compiled
+from repro.configs import SHAPES, ARCHS, get_arch, input_specs, param_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import LM
+from repro.parallel.context import ParallelCtx, use_ctx
+from repro.parallel.sharding import ShardingPolicy, bytes_per_device
+from repro.parallel.steps import (make_decode_step, make_lm_train_step,
+                                  make_prefill_step)
+from repro.training.optim import adamw
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
+               *, pipeline_k: int = 0, microbatches: int = 1,
+               cast_gathers: bool = False, seq_shard: bool | None = None,
+               master_fp32: bool = False, pure_dp: bool = False):
+    """Lower + compile one cell; returns (record, compiled)."""
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    cfg = arch.full
+    model = LM(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    policy = ShardingPolicy(mesh, pod_is_pipeline=bool(pipeline_k),
+                            pure_dp=pure_dp)
+    pod_axes = ("pod",) if (multi_pod and not pipeline_k) else ()
+    # Sequence parallelism for the attention families in train/prefill:
+    # shards the residual-stream carries that dominate backward memory.
+    # Recurrent families (ssm/hybrid) keep the sequence dim local — their
+    # scans run along it (DESIGN.md §7).
+    if seq_shard is None:
+        seq_shard = (cfg.family in ("dense", "moe", "vlm", "audio")
+                     and shape.kind in ("train", "prefill") and not pure_dp)
+    seq_axes = ("model",) if seq_shard else ()
+    data_axes = ("data", "model") if pure_dp else ("data",)
+    model_axes = () if pure_dp else ("model",)
+    ctx = ParallelCtx(mesh=mesh, pod_axes=pod_axes, seq_axes=seq_axes,
+                      data_axes=data_axes, model_axes=model_axes,
+                      cast_gathers=cast_gathers)
+
+    t0 = time.time()
+    with use_ctx(ctx):
+        if shape.kind == "train":
+            opt = adamw(3e-4)
+            p_structs = param_specs(cfg)
+            p_model = p_structs
+            if master_fp32:
+                from repro.models.lm import cast_gather_weights
+                from repro.training.optim import mixed_precision
+                dt = jnp.dtype(cfg.dtype)
+                cast = lambda tree: cast_gather_weights(tree, dt)
+                opt = mixed_precision(opt, cast)
+                p_model = jax.eval_shape(cast, p_structs)
+            state = {"params": p_model,
+                     "opt_state": jax.eval_shape(opt.init, p_structs),
+                     "step": jax.ShapeDtypeStruct((), jnp.int32)}
+            state_sh = policy.train_state_shardings(state)
+            batch = input_specs(cfg, shape)
+            batch_sh = policy.batch_shardings(batch)
+            pipeline = None
+            if pipeline_k:
+                from repro.parallel.pipeline import PipelineSpec
+                assert multi_pod, "the C2P2SL pipeline runs over the pod axis"
+                pipeline = PipelineSpec(num_stages=mesh.shape["pod"],
+                                        microbatches=pipeline_k)
+            step = make_lm_train_step(model, opt, microbatches=microbatches,
+                                      pipeline=pipeline)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None))
+            lowered = jitted.lower(state, batch)
+            state_bytes = bytes_per_device(state, policy)
+        elif shape.kind == "prefill":
+            p_structs = param_specs(cfg)
+            p_sh = policy.param_shardings(p_structs)
+            batch = input_specs(cfg, shape)
+            batch_sh = policy.batch_shardings(batch)
+            step = make_prefill_step(model)
+            jitted = jax.jit(step, in_shardings=(p_sh, batch_sh))
+            lowered = jitted.lower(p_structs, batch)
+            state_bytes = bytes_per_device(p_structs, policy)
+        else:  # decode
+            from repro.parallel.steps import init_serve_state
+            p_structs = param_specs(cfg)
+            p_sh = policy.param_shardings(p_structs)
+            serve = jax.eval_shape(
+                lambda: init_serve_state(model, shape.global_batch,
+                                         shape.seq_len))
+            serve_sh = policy.cache_shardings(serve, shape.global_batch)
+            batch = input_specs(cfg, shape)
+            batch_sh = policy.batch_shardings(batch)
+            step = make_decode_step(model)
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, serve_sh, batch_sh["tokens"]),
+                             out_shardings=(None, serve_sh))
+            lowered = jitted.lower(p_structs, serve, batch["tokens"])
+            state_bytes = (bytes_per_device(p_structs, policy)
+                           + bytes_per_device(
+                               serve, policy,
+                               spec_fn=lambda s: policy.cache_spec(
+                                   s, shape.global_batch)))
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    ca_flat = compiled.cost_analysis()
+    terms = roofline_from_compiled(
+        compiled, chips=chips, model_flops=model_flops_for(cfg, shape),
+        hlo_text=hlo)
+    record = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        "pipeline_k": pipeline_k,
+        "microbatches": microbatches,
+        "compile_s": round(time.time() - t0, 1),
+        "state_bytes_per_device": state_bytes,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.temp_size_in_bytes),
+        },
+        "roofline": terms.to_dict(),
+        # flat (trip-count-unaware) XLA numbers, for reference
+        "cost_analysis_flat": {
+            "flops": float(ca_flat.get("flops", 0.0)),
+            "bytes_accessed": float(ca_flat.get("bytes accessed", 0.0)),
+        },
+    }
+    return record, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--pipeline-k", type=int, default=0,
+                    help="enable the C2P2SL pod pipeline with k microbatches "
+                         "(multi-pod train only)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells already present in --out")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"],
+                              r.get("pipeline_k", 0)))
+                except (json.JSONDecodeError, KeyError):
+                    pass
+
+    n_ok = n_skip = n_fail = 0
+    for arch_name in archs:
+        arch = get_arch(arch_name)
+        for shape_name in shapes:
+            reason = arch.skip_reason(shape_name)
+            if reason is not None:
+                print(f"SKIP  {arch_name} x {shape_name}: {reason}")
+                with open(args.out, "a") as f:
+                    f.write(json.dumps({"arch": arch_name,
+                                        "shape": shape_name,
+                                        "skip": reason}) + "\n")
+                n_skip += 1
+                continue
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                key = (arch_name, shape_name, mesh_name, args.pipeline_k)
+                if key in done:
+                    print(f"done  {key}")
+                    continue
+                print(f"LOWER {arch_name} x {shape_name} x {mesh_name} ...",
+                      flush=True)
+                try:
+                    rec, compiled = lower_cell(
+                        arch_name, shape_name, multi,
+                        pipeline_k=args.pipeline_k,
+                        microbatches=args.microbatches)
+                    mem = rec["memory"]
+                    rl = rec["roofline"]
+                    print(f"  ok in {rec['compile_s']}s  "
+                          f"state/dev {rec['state_bytes_per_device']/2**30:.2f} GiB  "
+                          f"temp/dev {mem['temp_bytes']/2**30:.2f} GiB  "
+                          f"t_comp {rl['t_compute_s']:.4f}s "
+                          f"t_mem {rl['t_memory_s']:.4f}s "
+                          f"t_coll {rl['t_collective_s']:.4f}s "
+                          f"-> {rl['bottleneck']}", flush=True)
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+                    n_ok += 1
+                    del compiled
+                except Exception:
+                    n_fail += 1
+                    print(f"  FAIL {arch_name} x {shape_name} x {mesh_name}")
+                    traceback.print_exc()
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,116 @@
+"""End-to-end training driver.
+
+Examples
+--------
+# laptop-scale smoke training (CPU, reduced config):
+PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --size smoke \
+    --steps 200 --batch 16 --seq 64
+
+# the paper's C2P2SL k-microbatch gradient accumulation:
+... --microbatches 8
+
+# production mesh shapes are exercised by dryrun.py; this driver trains
+# for real on whatever devices exist.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data import TokenTaskConfig, token_batches
+from repro.models.lm import LM
+from repro.parallel.context import ParallelCtx, use_ctx
+from repro.parallel.sharding import ShardingPolicy
+from repro.parallel.steps import make_lm_train_step
+from repro.training import checkpoint as ckpt_lib
+from repro.training.optim import adamw, cosine_schedule
+
+
+def build_batch_iter(cfg, batch: int, seq: int, seed: int = 0):
+    task = TokenTaskConfig(vocab=cfg.vocab)
+    gen = token_batches(task, batch, seq, seed=seed)
+    if cfg.family == "vlm":
+        rng = np.random.default_rng(seed + 1)
+        def it():
+            for b in gen:
+                b["patch_embeds"] = rng.standard_normal(
+                    (batch, cfg.num_patches, cfg.d_model)).astype(np.float32)
+                yield b
+        return it()
+    if cfg.family == "audio":
+        rng = np.random.default_rng(seed + 2)
+        def it():
+            for b in gen:
+                b["frames"] = rng.standard_normal(
+                    (batch, cfg.enc_seq, cfg.d_model)).astype(np.float32)
+                yield b
+        return it()
+    return gen
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--size", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="the paper's k (gradient accumulation)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    spec = get_arch(args.arch)
+    cfg = spec.smoke if args.size == "smoke" else spec.full
+    model = LM(cfg)
+    params = model.init(jax.random.key(args.seed))
+    opt = adamw(cosine_schedule(args.lr, warmup=20, total=args.steps),
+                grad_clip=1.0)
+    state = {"params": params, "opt_state": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+
+    # resume-from-checkpoint (fault-tolerance entry point)
+    if args.ckpt_dir:
+        last = ckpt_lib.latest_step(args.ckpt_dir)
+        if last is not None:
+            state = ckpt_lib.restore(args.ckpt_dir, last, state)
+            print(f"resumed from step {last}")
+
+    step_fn = jax.jit(make_lm_train_step(model, opt,
+                                         microbatches=args.microbatches))
+    it = build_batch_iter(cfg, args.batch, args.seq, args.seed)
+
+    history = []
+    t0 = time.perf_counter()
+    start = int(state["step"])
+    for i in range(start, args.steps):
+        state, mets = step_fn(state, next(it))
+        if args.log_every and (i + 1) % args.log_every == 0:
+            row = {k: float(v) for k, v in mets.items()}
+            row.update(step=i + 1, wall_s=time.perf_counter() - t0)
+            history.append(row)
+            print(f"step {i+1:5d}  loss {row['loss']:.4f}  "
+                  f"wall {row['wall_s']:.1f}s", flush=True)
+        if args.ckpt_dir and args.ckpt_every \
+                and (i + 1) % args.ckpt_every == 0:
+            ckpt_lib.save(args.ckpt_dir, i + 1, state)
+            ckpt_lib.prune(args.ckpt_dir)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f, indent=1)
+    return history
+
+
+if __name__ == "__main__":
+    main()

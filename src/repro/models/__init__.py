@@ -1,0 +1,3 @@
+from repro.models.config import LMConfig
+from repro.models.lm import LM
+from repro.models import resnet

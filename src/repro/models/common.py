@@ -1,0 +1,181 @@
+"""Shared model building blocks (pure JAX, functional, pytree params)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def match_vma(val, ref):
+    """Give ``val`` (a freshly-created scan carry) the same varying-manual-
+    axes as ``ref`` — required when model code runs inside a partial-manual
+    shard_map (the C2P2SL pod pipeline), where zero-initialized carries are
+    otherwise 'unvarying' and scan rejects the carry type mismatch."""
+    try:
+        want = set(jax.typeof(ref).vma)
+        have = set(jax.typeof(val).vma)
+        missing = tuple(sorted(want - have))
+        if missing:
+            return jax.lax.pcast(val, missing, to="varying")
+    except (AttributeError, TypeError, ValueError):
+        pass
+    return val
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["w"])
+    return layernorm(x, p["w"], p["b"])
+
+
+def init_norm(d: int, kind: str, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"w": jnp.zeros((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def activation(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "sqrelu":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(kind)
+
+
+# --- rotary embeddings ------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., S, H, dh]; positions: [..., S] (broadcastable)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [..., S, dh/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., S, 1, dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- attention (chunked, flash-style online softmax over query blocks) ------
+
+NEG_INF = -1e30
+
+
+@jax.checkpoint
+def _attend_block(q, k, v, mask):
+    """q [B,hq,G,dh] (G=q block), k/v [B,hkv,S,dh], mask [G,S] bool.
+
+    ``jax.checkpoint`` = flash-attention-style backward: the [G,S] logits /
+    probabilities are recomputed in the backward pass instead of being saved
+    per query chunk (which would reconstitute the full [Sq,Skv] matrix).
+    """
+    b, hq, g, dh = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    qg = q.reshape(b, hkv, rep, g, dh)
+    logits = jnp.einsum("bkrgd,bksd->bkrgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(dh)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrgs,bksd->bkrgd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, g, dh).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, q_positions, kv_positions, causal: bool,
+                      window: int = 0, prefix_len: int = 0,
+                      q_chunk: int = 512):
+    """Memory-efficient attention.
+
+    q: [B, Sq, Hq, dh]; k, v: [B, Skv, Hkv, dh].
+    Never materializes [B, H, Sq, Skv]; peak scratch is [B, H, q_chunk, Skv].
+    ``window`` > 0 restricts to a sliding causal window (local attention).
+    ``prefix_len`` > 0 makes positions < prefix_len bidirectional (VLM
+    prefix-LM masking).
+    """
+    b, sq, hq, dh = q.shape
+    skv = k.shape[1]
+    qt = jnp.swapaxes(q, 1, 2)          # [B,Hq,Sq,dh]
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    def mask_for(qpos):
+        # qpos [G], kv_positions [Skv]
+        qp = qpos[:, None]
+        kp = kv_positions[None, :]
+        m = jnp.ones((qpos.shape[0], skv), dtype=bool)
+        if causal:
+            cm = kp <= qp
+            if prefix_len > 0:
+                cm = cm | (kp < prefix_len)
+            m = m & cm
+        if window > 0:
+            m = m & (kp > qp - window)
+        return m
+
+    if sq <= q_chunk:
+        out = _attend_block(qt, kt, vt, mask_for(q_positions))
+        return jnp.swapaxes(out, 1, 2)
+
+    n_chunks = -(-sq // q_chunk)
+    pad = n_chunks * q_chunk - sq
+    qp = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    pos = jnp.pad(q_positions, (0, pad), constant_values=-1)
+    qs = qp.reshape(b, hq, n_chunks, q_chunk, dh)
+    poss = pos.reshape(n_chunks, q_chunk)
+
+    def body(_, inp):
+        qc, pc = inp
+        return None, _attend_block(qc, kt, vt, mask_for(pc))
+
+    _, outs = jax.lax.scan(body, None,
+                           (jnp.moveaxis(qs, 2, 0), poss))
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, hq, n_chunks * q_chunk, dh)
+    return jnp.swapaxes(out[:, :, :sq], 1, 2)
+
+
+def decode_attention(q, k_cache, v_cache, *, position, window: int = 0):
+    """Single-token decode: q [B,1,Hq,dh], caches [B,S,Hkv,dh].
+
+    ``position`` is the index of the token being generated; cache entries at
+    kv index >= position (or outside the local window) are masked.
+    """
+    b, _, hq, dh = q.shape
+    s = k_cache.shape[1]
+    kv_pos = jnp.arange(s)
+    mask = kv_pos <= position
+    if window > 0:
+        mask = mask & (kv_pos > position - window)
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k_cache, 1, 2)
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    out = _attend_block(qt, kt, vt, mask[None, :])
+    return jnp.swapaxes(out, 1, 2)

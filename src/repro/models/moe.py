@@ -1,0 +1,149 @@
+"""Mixture-of-experts block: top-k routing with capacity-bounded dispatch.
+
+The dispatch is computed per data shard inside a ``shard_map`` (expert
+weights tensor-parallel along d_ff over the model axis), so:
+  * any expert count works — no divisibility requirement between the number
+    of experts and any mesh axis (granite's 40 experts vs a 16-wide axis);
+  * no all-to-all is needed: tokens stay put, each device holds a d_ff slice
+    of EVERY expert; the second projection psums over the model axis
+    (row-parallel matmul);
+  * capacity buffers are per-shard, keeping the scatter local.
+
+Without an active mesh (unit tests) the same local function runs directly.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import activation, dense_init
+from repro.parallel.context import get_ctx
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    ew = functools.partial(jax.random.normal, dtype=dtype)
+    scale_in = 1.0 / math.sqrt(d_model)
+    scale_out = 1.0 / math.sqrt(d_ff)
+    return {
+        "router": dense_init(ks[0], d_model, n_experts, dtype),
+        "w1": ew(ks[1], (n_experts, d_model, d_ff)) * scale_in,
+        "w3": ew(ks[2], (n_experts, d_model, d_ff)) * scale_in,
+        "w2": ew(ks[3], (n_experts, d_ff, d_model)) * scale_out,
+    }
+
+
+def _capacity(n_tokens: int, topk: int, n_experts: int, factor: float) -> int:
+    c = int(math.ceil(n_tokens * topk * factor / n_experts))
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def _moe_local(x, router, w1, w3, w2, *, topk: int, capacity: int, act: str):
+    """Dispatch/combine on one shard.  x: [T, D] -> ([T, D], aux_loss)."""
+    t, d = x.shape
+    e = router.shape[1]
+    logits = (x.astype(jnp.float32) @ router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # [T, E]
+    gate, idx = jax.lax.top_k(probs, topk)                      # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(1), axis=0) / topk
+    aux = e * jnp.sum(me * ce)
+
+    eid = idx.reshape(-1)                                       # [T*K]
+    onehot = jax.nn.one_hot(eid, e, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                              eid[:, None], axis=1)[:, 0]       # rank in expert
+    keep = pos < capacity
+    slot = jnp.where(keep, eid * capacity + pos, e * capacity)  # drop overflow
+
+    x_rep = jnp.repeat(x, topk, axis=0)                         # [T*K, D]
+    buf = jnp.zeros((e * capacity + 1, d), x.dtype).at[slot].set(x_rep)
+    h = buf[:-1].reshape(e, capacity, d)
+
+    a = activation(jnp.einsum("ecd,edf->ecf", h, w1.astype(x.dtype)), act)
+    if w3 is not None:
+        a = a * jnp.einsum("ecd,edf->ecf", h, w3.astype(x.dtype))
+    y = jnp.einsum("ecf,efd->ecd", a, w2.astype(x.dtype))
+
+    flat = jnp.concatenate(
+        [y.reshape(e * capacity, d), jnp.zeros((1, d), y.dtype)], axis=0)
+    picked = flat[slot] * (gate.reshape(-1, 1).astype(y.dtype)
+                           * keep[:, None].astype(y.dtype))
+    out = picked.reshape(t, topk, d).sum(axis=1)
+    return out, aux
+
+
+def apply_moe(params, x, *, topk: int, cap_factor: float, act: str):
+    """x: [B, S, D] -> ([B, S, D], aux).  Shard-aware via the parallel ctx."""
+    ctx = get_ctx()
+    b, s, d = x.shape
+    if ctx.mesh is None:
+        cap = _capacity(b * s, topk, params["router"].shape[1], cap_factor)
+        out, aux = _moe_local(x.reshape(-1, d), params["router"], params["w1"],
+                              params["w3"], params["w2"],
+                              topk=topk, capacity=cap, act=act)
+        return out.reshape(b, s, d), aux
+
+    batch_axes = ctx.batch_axes
+    model_axes = ctx.model_axes
+    n_data = ctx.axis_size(batch_axes)
+    n_model = ctx.axis_size(model_axes)
+
+    if ctx.seq_axes:
+        # Token-sharded dispatch (sequence-parallel regime): tokens are
+        # sharded over BOTH the batch axes (batch dim) and the model axes
+        # (sequence dim); every device runs the dispatch for its own small
+        # token slab against the full (gathered) expert weights.  Capacity
+        # buffers shrink by n_model; the per-layer weight gather is a
+        # transient.  No psum: each token's full d_model output is local.
+        local_tokens = max(1, (b // max(n_data, 1))
+                           * (s // max(n_model, 1)))
+        cap = _capacity(local_tokens, topk, params["router"].shape[1],
+                        cap_factor)
+
+        def shard_fn(xs, router, w1, w3, w2):
+            t_loc = xs.shape[0] * xs.shape[1]
+            out, aux = _moe_local(xs.reshape(t_loc, d), router, w1, w3, w2,
+                                  topk=topk, capacity=cap, act=act)
+            aux = jax.lax.pmean(aux, batch_axes + model_axes)
+            return out.reshape(xs.shape), aux
+
+        fn = jax.shard_map(
+            shard_fn, mesh=ctx.mesh,
+            in_specs=(P(batch_axes, ctx.seq_axes), P(None), P(None),
+                      P(None), P(None)),
+            out_specs=(P(batch_axes, ctx.seq_axes), P()),
+            check_vma=False)
+        return fn(x, params["router"], params["w1"], params["w3"],
+                  params["w2"])
+
+    local_tokens = max(1, (b // max(n_data, 1)) * s)
+    cap = _capacity(local_tokens, topk, params["router"].shape[1], cap_factor)
+
+    def shard_fn(xs, router, w1, w3, w2):
+        t_loc = xs.shape[0] * xs.shape[1]
+        out, aux = _moe_local(xs.reshape(t_loc, d), router, w1, w3, w2,
+                              topk=topk, capacity=cap, act=act)
+        # Second projection is row-parallel over the model axis (pure-DP
+        # mode has no model axes: experts are whole per shard, no psum).
+        if model_axes:
+            out = jax.lax.psum(out, model_axes)
+        aux = jax.lax.pmean(aux, batch_axes + model_axes)
+        return out.reshape(xs.shape), aux
+
+    w_spec = P(None, None, model_axes) if model_axes else P(None)
+    w2_spec = P(None, model_axes, None) if model_axes else P(None)
+    fn = jax.shard_map(
+        shard_fn, mesh=ctx.mesh,
+        in_specs=(P(batch_axes), P(None), w_spec, w_spec, w2_spec),
+        out_specs=(P(batch_axes), P()),
+        check_vma=False)
+    return fn(x, params["router"], params["w1"], params["w3"], params["w2"])

@@ -1,0 +1,158 @@
+"""Griffin/RecurrentGemma recurrent block: conv1d + RG-LRU (arXiv:2402.19427).
+
+The RG-LRU is a diagonal linear recurrence with data-dependent decay:
+    r_t = sigmoid(x_t W_a),  i_t = sigmoid(x_t W_x)
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+Being linear in h it admits a log-depth ``associative_scan`` on TPU (the
+Pallas kernel in repro/kernels/rglru.py is the fused production path; this
+module is the reference / CPU path).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+RG_LRU_C = 8.0
+
+
+def init_recurrent(key, d_model: int, r_width: int, conv_width: int,
+                   dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a^c lands in [0.9, 0.999] (paper appendix).
+    u = jax.random.uniform(ks[0], (r_width,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / RG_LRU_C))   # softplus^-1
+    return {
+        "in_x": dense_init(ks[1], d_model, r_width, dtype),
+        "in_y": dense_init(ks[2], d_model, r_width, dtype),
+        "conv_w": jax.random.normal(ks[3], (conv_width, r_width), dtype) * 0.1,
+        "conv_b": jnp.zeros((r_width,), dtype),
+        "gate_a": dense_init(ks[4], r_width, r_width, dtype),
+        "gate_x": dense_init(ks[5], r_width, r_width, dtype),
+        "lambda": lam.astype(dtype),
+        "out": dense_init(jax.random.fold_in(key, 7), r_width, d_model, dtype),
+    }
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv.  x: [B, S, R], w: [W, R]."""
+    width = w.shape[0]
+    out = jnp.zeros_like(x)
+    for j in range(width):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[width - 1 - j][None, None, :]
+    return out + b[None, None, :]
+
+
+def rg_lru_scan(x_gated, log_a, h0=None):
+    """Linear recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2) x_t via assoc scan.
+
+    x_gated, log_a: [B, S, R].  Returns (h_all [B,S,R], h_last [B,R]).
+    """
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * x_gated
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh, hh[:, -1]
+
+
+LRU_CHUNK = 256
+
+
+def rg_lru_scan_chunked(x_gated, log_a, h0=None, chunk: int = LRU_CHUNK):
+    """Chunked RG-LRU: lax.scan over S/C chunks, associative scan inside.
+
+    Backward saves one [B, R] state per chunk (the chunk body is
+    checkpointed); the log-depth intra-chunk scan is recomputed.  This is
+    the memory-sane long-sequence path and the Pallas kernel's oracle.
+    """
+    bsz, s, r_w = x_gated.shape
+    pad = (-s) % chunk
+    if pad:
+        x_gated = jnp.pad(x_gated, ((0, 0), (0, pad), (0, 0)))
+        # log_a = 0 => a = 1, b = 0: padded steps keep the state unchanged
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+    n = (s + pad) // chunk
+    xs = jnp.moveaxis(x_gated.reshape(bsz, n, chunk, r_w), 1, 0)
+    ls = jnp.moveaxis(log_a.reshape(bsz, n, chunk, r_w), 1, 0)
+
+    @jax.checkpoint
+    def body(h_in, inp):
+        xc, lc = inp
+        hh, h_last = rg_lru_scan(xc, lc, h0=h_in)
+        return h_last, hh
+
+    from repro.models.common import match_vma
+    h0 = jnp.zeros((bsz, r_w), x_gated.dtype) if h0 is None else h0
+    h0 = match_vma(h0, x_gated)
+    h_last, hs = jax.lax.scan(body, h0, (xs, ls))
+    hh = jnp.moveaxis(hs, 0, 1).reshape(bsz, s + pad, r_w)
+    return hh[:, :s], h_last
+
+
+def apply_recurrent(p, x, dt=jnp.bfloat16, return_state: bool = False):
+    """Full-sequence forward.  x: [B, S, D] -> [B, S, D].
+
+    ``return_state=True`` additionally returns the decode state (final h +
+    conv history) so a chunked prefill can hand off to decode_step.
+    """
+    w = lambda n: p[n].astype(dt)
+    y = jax.nn.gelu(x @ w("in_y"))
+    xr_raw = x @ w("in_x")
+    xr = causal_conv1d(xr_raw, w("conv_w"), w("conv_b"))
+
+    xf = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["gate_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["gate_x"].astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    scan = rg_lru_scan if x.shape[1] <= LRU_CHUNK else rg_lru_scan_chunked
+    h, h_last = scan(i * xf, log_a)
+    out = (h.astype(dt) * y) @ w("out")
+    if not return_state:
+        return out
+    width = p["conv_w"].shape[0]
+    tail = xr_raw[:, -(width - 1):]
+    pad = (width - 1) - tail.shape[1]
+    if pad > 0:                       # sequence shorter than the conv
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    return out, {"h": h_last, "conv": tail.astype(jnp.float32)}
+
+
+def init_recurrent_state(batch: int, r_width: int, conv_width: int,
+                         dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, r_width), dtype),
+        "conv": jnp.zeros((batch, conv_width - 1, r_width), dtype),
+    }
+
+
+def apply_recurrent_decode(p, x, state, dt=jnp.bfloat16):
+    """Single-token decode.  x: [B, 1, D] -> ([B, 1, D], new_state)."""
+    w = lambda n: p[n].astype(dt)
+    y = jax.nn.gelu(x @ w("in_y"))
+    xr = (x @ w("in_x"))[:, 0]                                # [B, R]
+    hist = jnp.concatenate([state["conv"], xr[:, None]], axis=1)  # [B, W, R]
+    cw = w("conv_w")
+    xr = jnp.einsum("bwr,wr->br", hist, cw) + w("conv_b")
+    new_conv = hist[:, 1:]
+
+    xf = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["gate_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ p["gate_x"].astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    h = a * state["h"] + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * (i * xf)
+    out = (h[:, None].astype(dt) * y) @ w("out")
+    return out, {"h": h, "conv": new_conv}

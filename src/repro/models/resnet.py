@@ -1,0 +1,117 @@
+"""ResNet-18 adapted to 32x32 CIFAR-10 (paper SIV-A, Table II).
+
+CIFAR adaptation (standard He et al. variant): 3x3 stem, no max-pool.
+Norm is GroupNorm by default so that micro-batched gradient accumulation is
+*exactly* equivalent to full-batch training — the property the paper asserts
+for C2P2SL (SII-C last paragraph).  BatchNorm would break bit-equivalence
+across micro-batch splits (batch statistics differ); see DESIGN.md.
+
+The model exposes ``cut points`` matching Table II rows:
+  0: conv1 | 1..4: block1..block4 | 5: avgpool+fc
+so ``forward_until(l)`` / ``forward_from(l)`` implement the UE-side / BS-side
+submodels for any cut layer l in {1..5}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+CUT_NAMES = ("conv1", "block1", "block2", "block3", "block4", "avgpool_fc")
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _gn(x, w, b, groups=8, eps=1e-5):
+    n, h, wd, c = x.shape
+    xg = x.reshape(n, h, wd, groups, c // groups).astype(jnp.float32)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(n, h, wd, c) * w + b).astype(x.dtype)
+
+
+def _init_basic(key, cin, cout, stride):
+    ks = jax.random.split(key, 3)
+    p = {
+        "c1": _conv_init(ks[0], 3, 3, cin, cout),
+        "g1w": jnp.ones((cout,)), "g1b": jnp.zeros((cout,)),
+        "c2": _conv_init(ks[1], 3, 3, cout, cout),
+        "g2w": jnp.ones((cout,)), "g2b": jnp.zeros((cout,)),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(ks[2], 1, 1, cin, cout)
+        p["gpw"] = jnp.ones((cout,))
+        p["gpb"] = jnp.zeros((cout,))
+    return p
+
+
+def _apply_basic(p, x, stride):
+    h = jax.nn.relu(_gn(_conv(x, p["c1"], stride), p["g1w"], p["g1b"]))
+    h = _gn(_conv(h, p["c2"]), p["g2w"], p["g2b"])
+    if "proj" in p:
+        x = _gn(_conv(x, p["proj"], stride), p["gpw"], p["gpb"])
+    return jax.nn.relu(x + h)
+
+
+_STAGES = ((64, 1), (128, 2), (256, 2), (512, 2))
+
+
+def init_resnet18(key, num_classes: int = 10):
+    ks = jax.random.split(key, 11)
+    params = {
+        "conv1": _conv_init(ks[0], 3, 3, 3, 64),
+        "g1w": jnp.ones((64,)), "g1b": jnp.zeros((64,)),
+    }
+    cin = 64
+    ki = 1
+    for si, (cout, stride) in enumerate(_STAGES):
+        blocks = []
+        for bi in range(2):
+            blocks.append(_init_basic(ks[ki], cin, cout,
+                                      stride if bi == 0 else 1))
+            ki += 1
+            cin = cout
+        params[f"stage{si}"] = tuple(blocks)
+    params["fc_w"] = jax.random.normal(ks[9], (512, num_classes)) * 0.02
+    params["fc_b"] = jnp.zeros((num_classes,))
+    return params
+
+
+def forward_cut(params, x, start: int, stop: int):
+    """Run cut units [start, stop).  Unit indices per CUT_NAMES."""
+    if start <= 0 < stop:
+        x = jax.nn.relu(_gn(_conv(x, params["conv1"]), params["g1w"],
+                            params["g1b"]))
+    for si, (_, stride) in enumerate(_STAGES):
+        u = si + 1
+        if start <= u < stop:
+            for bi, bp in enumerate(params[f"stage{si}"]):
+                x = _apply_basic(bp, x, stride if bi == 0 else 1)
+    if start <= 5 < stop:
+        x = x.mean(axis=(1, 2))
+        x = x @ params["fc_w"] + params["fc_b"]
+    return x
+
+
+def forward(params, x):
+    return forward_cut(params, x, 0, 6)
+
+
+def loss_fn(params, batch):
+    logits = forward(params, batch["images"])
+    labels = batch["labels"]
+    ll = jax.nn.log_softmax(logits.astype(jnp.float32))
+    loss = -jnp.take_along_axis(ll, labels[:, None], axis=1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"acc": acc}

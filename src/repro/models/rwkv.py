@@ -1,0 +1,196 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892): data-dependent decay WKV.
+
+Time-mix recurrence per head (dh = head dim):
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with decay w_t = exp(-exp(w0 + tanh(x W_A) W_B)) data-dependent (the Finch
+novelty vs RWKV5).  Reference path uses lax.scan over time; the Pallas
+kernel (repro/kernels/rwkv6.py) is the chunked production path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def init_rwkv_time(key, d_model: int, head_dim: int, lora: int,
+                   dtype=jnp.float32):
+    n_heads = d_model // head_dim
+    ks = jax.random.split(key, 10)
+    mu = lambda k: jax.random.uniform(k, (d_model,), dtype, 0.0, 1.0)
+    return {
+        "mu_r": mu(ks[0]), "mu_k": mu(ks[1]), "mu_v": mu(ks[2]),
+        "mu_w": mu(ks[3]), "mu_g": mu(ks[4]),
+        "w_r": dense_init(ks[5], d_model, d_model, dtype),
+        "w_k": dense_init(ks[6], d_model, d_model, dtype),
+        "w_v": dense_init(ks[7], d_model, d_model, dtype),
+        "w_g": dense_init(ks[8], d_model, d_model, dtype),
+        "w_o": dense_init(ks[9], d_model, d_model, dtype),
+        "w0": jnp.full((d_model,), -6.0, dtype),          # slow decay init
+        "w_a": dense_init(jax.random.fold_in(key, 11), d_model, lora, dtype),
+        "w_b": dense_init(jax.random.fold_in(key, 12), lora, d_model, dtype),
+        "u": jax.random.normal(jax.random.fold_in(key, 13),
+                               (n_heads, head_dim), dtype) * 0.1,
+        "ln_w": jnp.ones((d_model,), dtype),
+        "ln_b": jnp.zeros((d_model,), dtype),
+    }
+
+
+def init_rwkv_channel(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    mu = lambda k: jax.random.uniform(k, (d_model,), dtype, 0.0, 1.0)
+    return {
+        "mu_k": mu(ks[0]), "mu_r": mu(ks[1]),
+        "w_k": dense_init(ks[2], d_model, d_ff, dtype),
+        "w_v": dense_init(ks[3], d_ff, d_model, dtype),
+        "w_r": dense_init(ks[4], d_model, d_model, dtype),
+    }
+
+
+def _token_shift(x, last):
+    """shifted_t = x_{t-1}; position 0 uses ``last`` (carry across steps)."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _group_norm(x, w, b, n_heads, eps=64e-5):
+    """Per-head layernorm of the WKV output, RWKV convention."""
+    b_, s, d = x.shape
+    xh = x.reshape(b_, s, n_heads, d // n_heads).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b_, s, d) * w + b).astype(x.dtype)
+
+
+def wkv6_scan(r, k, v, w, u, s0=None):
+    """Reference WKV6 (step-by-step).  r,k,v,w: [B, S, H, dh]; u: [H, dh].
+
+    Returns (out [B,S,H,dh], final_state [B,H,dh,dh]).
+    State S[i, j] accumulates k_i * v_j.  O(S) sequential steps; backward
+    saves a state per step — use only for short sequences / as the oracle
+    for the chunked path below.
+    """
+    b, s, h, dh = r.shape
+    state = jnp.zeros((b, h, dh, dh), jnp.float32) if s0 is None else s0
+
+    def step(carry, inp):
+        rt, kt, vt, wt = inp                              # [B,H,dh] each
+        kv = kt[..., :, None] * vt[..., None, :]          # [B,H,dh,dh]
+        o = jnp.einsum("bhi,bhij->bhj", rt,
+                       carry + u[None, :, :, None] * kv)
+        new = wt[..., :, None] * carry + kv
+        return new, o
+
+    seq = lambda a: jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    final, outs = jax.lax.scan(step, state,
+                               (seq(r), seq(k), seq(v), seq(w)))
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), final
+
+
+WKV_CHUNK = 64
+
+
+def wkv6_chunked(r, k, v, w, u, s0=None, chunk: int = WKV_CHUNK):
+    """Chunked WKV6 — the TPU-native formulation (and the Pallas kernel's
+    oracle): O(S/C) sequential chunk steps, intra-chunk work as [C, C]
+    matmuls that map onto the MXU.
+
+    Per chunk with incoming state S and cumulative log-decay
+    ``L_t = sum_{j<t} log w_j`` (L_0 = 0):
+
+        o_t = (r_t e^{L_t})^T S_in                       (state term)
+            + sum_{j<t} [r_t e^{L_t}] . [k_j e^{-L_{j+1}}] v_j   (intra)
+            + (r_t . (u * k_t)) v_t                      (diagonal)
+        S_out = diag(e^{L_C}) S_in + sum_j diag(e^{L_C - L_{j+1}}) k_j v_j^T
+
+    The intra term's two exponential factors are stabilized by splitting
+    around m = L_C / 2 (each factor's exponent then spans at most |L_C|/2).
+    Backward memory: one state per chunk (jax.checkpoint on the chunk body).
+    """
+    from repro.models.common import match_vma
+    b, s, h, dh = r.shape
+    state = jnp.zeros((b, h, dh, dh), jnp.float32) if s0 is None else \
+        s0.astype(jnp.float32)
+    state = match_vma(state, r)
+    pad = (-s) % chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)           # w=1 => state unchanged
+    n_chunks = (s + pad) // chunk
+
+    def chunkify(a):
+        return jnp.moveaxis(
+            a.astype(jnp.float32).reshape(b, n_chunks, chunk, h, dh),
+            1, 0)                                   # [N, B, C, H, dh]
+
+    rs, ks, vs, ws = map(chunkify, (r, k, v, w))
+    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        rc, kc, vc, wc = inp                        # [B, C, H, dh]
+        logw = jnp.log(jnp.maximum(wc, 1e-30))
+        lcum = jnp.cumsum(logw, axis=1)             # L_{t+1}
+        l_t = lcum - logw                           # L_t  (exclusive)
+        l_total = lcum[:, -1:]                      # L_C
+        m = 0.5 * l_total
+        r_t = rc * jnp.exp(l_t - m)                 # stabilized factors
+        k_j = kc * jnp.exp(m - lcum)
+        # intra-chunk attention-like matmul per head: [B,H,C,C]
+        att = jnp.einsum("bthi,bjhi->bhtj", r_t, k_j) * causal[None, None]
+        diag = jnp.einsum("bthi,bthi->bth", rc, u[None, None] * kc)
+        o = jnp.einsum("bhtj,bjhi->bthi", att, vc) \
+            + diag[..., None] * vc
+        # state term
+        o = o + jnp.einsum("bthi,bhij->bthj", rc * jnp.exp(l_t), carry)
+        # state update
+        k_hat = kc * jnp.exp(l_total - lcum)
+        new = jnp.exp(l_total[:, 0, :, :, None]) * carry \
+            + jnp.einsum("bjhi,bjhd->bhid", k_hat, vc)
+        return new, o
+
+    final, outs = jax.lax.scan(body, state, (rs, ks, vs, ws))
+    outs = jnp.moveaxis(outs, 0, 1).reshape(b, s + pad, h, dh)
+    return outs[:, :s].astype(r.dtype), final
+
+
+def apply_rwkv_time(p, x, head_dim: int, *, shift_in=None, state_in=None,
+                    dt=jnp.bfloat16):
+    """Time-mix.  x: [B, S, D].  Returns (out, (last_x, state))."""
+    b, s, d = x.shape
+    h = d // head_dim
+    last = jnp.zeros((b, d), x.dtype) if shift_in is None else shift_in
+    sh = _token_shift(x, last)
+    mix = lambda mu: x + (sh - x) * p[mu].astype(x.dtype)
+
+    w_ = lambda n: p[n].astype(dt)
+    r = (mix("mu_r") @ w_("w_r")).reshape(b, s, h, head_dim)
+    k = (mix("mu_k") @ w_("w_k")).reshape(b, s, h, head_dim)
+    v = (mix("mu_v") @ w_("w_v")).reshape(b, s, h, head_dim)
+    g = jax.nn.silu(mix("mu_g") @ w_("w_g"))
+    xw = mix("mu_w").astype(jnp.float32)
+    decay = p["w0"].astype(jnp.float32) + \
+        jnp.tanh(xw @ p["w_a"].astype(jnp.float32)) @ p["w_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, s, h, head_dim)
+
+    wkv = wkv6_scan if s <= WKV_CHUNK else wkv6_chunked
+    out, final = wkv(r, k, v, w, p["u"].astype(jnp.float32), s0=state_in)
+    out = _group_norm(out.reshape(b, s, d), p["ln_w"].astype(jnp.float32),
+                      p["ln_b"].astype(jnp.float32), h)
+    out = (out * g) @ w_("w_o")
+    return out, (x[:, -1], final)
+
+
+def apply_rwkv_channel(p, x, *, shift_in=None, dt=jnp.bfloat16):
+    b, s, d = x.shape
+    last = jnp.zeros((b, d), x.dtype) if shift_in is None else shift_in
+    sh = _token_shift(x, last)
+    mix = lambda mu: x + (sh - x) * p[mu].astype(x.dtype)
+    w_ = lambda n: p[n].astype(dt)
+    k = jnp.square(jax.nn.relu(mix("mu_k") @ w_("w_k")))
+    r = jax.nn.sigmoid(mix("mu_r") @ w_("w_r"))
+    return r * (k @ w_("w_v")), x[:, -1]

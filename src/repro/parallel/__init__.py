@@ -1,0 +1,2 @@
+from repro.parallel.context import (ParallelCtx, get_ctx, set_ctx, use_ctx,
+                                    constrain)

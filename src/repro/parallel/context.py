@@ -1,0 +1,79 @@
+"""Global parallel context: mesh + logical axis mapping.
+
+Model code never hard-codes mesh axes; it asks the active ``ParallelCtx``.
+With no context set (unit tests, single host), every helper degrades to a
+no-op and the models run as plain single-device JAX.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Mesh | None = None
+    data_axes: tuple = ("data",)    # shard batch / tokens
+    model_axes: tuple = ("model",)  # shard d_ff / experts / vocab
+    pod_axes: tuple = ()            # extra outer axis (multi-pod)
+    seq_axes: tuple = ()            # sequence parallelism: shard the
+                                    # residual stream's seq dim (Megatron-SP
+                                    # style); empty = replicated seq
+    cast_gathers: bool = False      # pre-cast matmul weights to the compute
+                                    # dtype BEFORE the per-layer FSDP
+                                    # all-gather (halves gather payloads;
+                                    # EXPERIMENTS.md §Perf iteration 1)
+
+    @property
+    def batch_axes(self) -> tuple:
+        """All axes usable for batch sharding (pod acts as extra DP)."""
+        return tuple(self.pod_axes) + tuple(self.data_axes)
+
+    @property
+    def hidden_spec(self):
+        """PartitionSpec of the [B, S, D] residual stream."""
+        return P(self.batch_axes, self.seq_axes or None)
+
+    def axis_size(self, axes) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+_CTX = ParallelCtx()
+
+
+def get_ctx() -> ParallelCtx:
+    return _CTX
+
+
+def set_ctx(ctx: ParallelCtx) -> None:
+    global _CTX
+    _CTX = ctx
+
+
+@contextlib.contextmanager
+def use_ctx(ctx: ParallelCtx):
+    global _CTX
+    prev = _CTX
+    _CTX = ctx
+    try:
+        yield ctx
+    finally:
+        _CTX = prev
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint that no-ops without a mesh."""
+    ctx = get_ctx()
+    if ctx.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))

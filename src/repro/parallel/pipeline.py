@@ -1,0 +1,196 @@
+"""C2P2SL as a TPU pipeline: micro-batch pipelining over the ``pod`` axis.
+
+This is the paper's core insight transplanted to pods (DESIGN.md §3/§4):
+the slow link is no longer a TDMA radio channel but the inter-pod DCN/ICI
+boundary.  The first ``l`` layers ("UE-side model") live on pod 0, the rest
+("BS-side model") on pod 1; each batch is split into ``k`` micro-batches
+that stream through the stages.  The mapping:
+
+    UE FP            -> stage-0 block scan on micro-batch m
+    uplink (UT)      -> ppermute stage0 -> stage1 of the cut activations
+    BS FP + BP 1F1B  -> stage-1 compute; jax.grad through the scan gives
+                        the reverse pipeline
+    downlink (DT)    -> the autodiff transpose of the forward ppermute
+    gradient accumulation over k micro-batches -> the scan's grad sum
+
+Implementation: a ``shard_map`` manual over ``pod`` only (data/model axes
+stay GSPMD-auto), with a ``lax.scan`` over ``k + S - 1`` pipeline ticks.
+At tick t, stage s processes micro-batch ``t - s``; outputs move to stage
+``s+1`` via ``ppermute`` — XLA's latency-hiding scheduler overlaps the
+transfer with the next tick's compute, which is exactly the paper's
+communication/computation overlap.
+
+Embedding and LM head run replicated across pods (negligible FLOP share);
+the ppermuted tensor is the cut-layer activation — the paper's ``s_l``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.blocks import apply_block
+from repro.models.common import apply_norm
+from repro.parallel.context import ParallelCtx, use_ctx
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    num_stages: int = 2          # S: UE-side / BS-side (extensible)
+    microbatches: int = 4        # k — pick with repro.core.ao.lemma1_k
+    axis: str = "pod"
+
+
+def _split_stages(blocks, num_stages: int):
+    """[L, ...] stacked block params -> [S, L/S, ...]."""
+    def r(a):
+        l = a.shape[0]
+        assert l % num_stages == 0, (
+            f"num_layers {l} not divisible by {num_stages} stages")
+        return a.reshape((num_stages, l // num_stages) + a.shape[1:])
+    return jax.tree.map(r, blocks)
+
+
+def pipeline_blocks(cfg, blocks, xs, positions, spec: PipelineSpec, *,
+                    mesh, prefix_len: int = 0, enc_outs=None):
+    """Run the stacked homogeneous block stack as a pipeline.
+
+    blocks: stacked params, leaves [L, ...]
+    xs:     [k, mb, seq, d] micro-batched activations (embedded)
+    enc_outs: optional [k, mb, enc_seq, d] (whisper cross-attention memory)
+    Returns (hidden [k, mb, seq, d], aux_loss scalar).
+    """
+    kind = cfg.layer_kinds[0]
+    k = xs.shape[0]
+    s_stages = spec.num_stages
+    ticks = k + s_stages - 1
+    staged = _split_stages(blocks, s_stages)
+
+    from jax.sharding import AxisType, NamedSharding
+    # constraint mesh view: pod is Manual inside this region, rest Auto
+    abs_mesh = mesh.abstract_mesh.update(axis_types=tuple(
+        AxisType.Manual if n == spec.axis else AxisType.Auto
+        for n in mesh.shape))
+    # micro-batch over data; seq deliberately NOT model-sharded inside the
+    # stage: per-micro-batch SP re-gathers the stage weights and re-reduces
+    # weight grads k times (refuted, EXPERIMENTS.md §Perf pipeline it2) —
+    # without SP, GSPMD defers the weight-grad reduction across ticks.
+    data_spec = NamedSharding(abs_mesh, P("data"))
+
+    def pin(x):
+        """Anchor the micro-batch dim to the data axis INSIDE the manual-
+        over-pod region — without this GSPMD replicates the micro-batch
+        across the 16-wide data axis (16x redundant compute; EXPERIMENTS.md
+        §Perf, pipeline iteration 1)."""
+        return jax.lax.with_sharding_constraint(x, data_spec)
+
+    def stage_scan(blocks_local, x, enc_out):
+        """One stage's block scan on one micro-batch."""
+        def body(carry, layer_params):
+            y, aux = apply_block(layer_params, carry, cfg, kind,
+                                 positions=positions, prefix_len=prefix_len,
+                                 enc_out=enc_out,
+                                 use_rope=(kind != "rwkv"))
+            return pin(y), aux
+        y, auxes = jax.lax.scan(jax.checkpoint(body), pin(x), blocks_local)
+        return y, auxes.sum()
+
+    def per_stage(blocks_stage, xs_full, enc_full):
+        # manual over 'pod': blocks_stage leaves [1, L/S, ...]
+        blocks_local = jax.tree.map(lambda a: a[0], blocks_stage)
+        stage = jax.lax.axis_index(spec.axis)
+        # carries differ per stage -> mark them varying over the pod axis
+        state = jax.lax.pcast(jnp.zeros(xs_full.shape[1:], xs_full.dtype),
+                              (spec.axis,), to="varying")
+        aux0 = jax.lax.pcast(jnp.float32(0.0), (spec.axis,), to="varying")
+        perm = [(i, i + 1) for i in range(s_stages - 1)]
+
+        def tick(carry, t):
+            state, aux_acc = carry
+            m = jnp.clip(t - stage, 0, k - 1)      # this stage's micro-batch
+            inp0 = jax.lax.dynamic_index_in_dim(xs_full, m, 0, keepdims=False)
+            cur = jnp.where(stage == 0, inp0, state)
+            enc = None
+            if enc_full is not None:
+                enc = jax.lax.dynamic_index_in_dim(enc_full, m, 0,
+                                                   keepdims=False)
+            y, aux = stage_scan(blocks_local, cur, enc)
+            nxt = jax.lax.ppermute(y, spec.axis, perm)
+            live = (t >= stage) & (t < stage + k)
+            aux_acc = aux_acc + jnp.where(live, aux, 0.0)
+            return (nxt, aux_acc), y
+
+        (_, aux_acc), ys = jax.lax.scan(
+            tick, (state, aux0), jnp.arange(ticks))
+        # last stage's outputs live at ticks [S-1, S-1+k)
+        out = jax.lax.dynamic_slice_in_dim(ys, s_stages - 1, k, axis=0)
+        # stack a stage axis so out_specs=P('pod') can concatenate
+        return out[None], aux_acc[None]
+
+    fn = jax.shard_map(
+        per_stage, mesh=mesh,
+        in_specs=(P(spec.axis), P(), P()),
+        out_specs=(P(spec.axis), P(spec.axis)),
+        axis_names={spec.axis}, check_vma=True)
+    outs, auxes = fn(staged, xs, enc_outs)
+    return outs[-1], auxes[-1]          # the last stage's real outputs
+
+
+def make_pipelined_loss(model, spec: PipelineSpec, mesh=None):
+    """loss_fn(params, batch) with the block stack pipelined over pods.
+
+    Requires a homogeneous (scan-stacked) architecture; the heterogeneous
+    recurrentgemma pattern keeps the pod-as-DP path (DESIGN.md §7).
+    """
+    cfg = model.cfg
+    assert cfg.homogeneous, (
+        "pipeline mode needs a homogeneous layer stack; "
+        f"{cfg.name} has a mixed pattern — use pod-as-data-parallel")
+    k = spec.microbatches
+
+    def loss_fn(params, batch):
+        # Plain-JAX context inside: data/model axes are GSPMD-auto, the
+        # pipeline shard_map is manual over 'pod' only.
+        from repro.parallel.context import get_ctx
+        use_mesh = mesh if mesh is not None else get_ctx().mesh
+        with use_ctx(ParallelCtx()):
+            dt = jnp.dtype(cfg.dtype)
+            tokens = batch["tokens"]
+            labels = batch["labels"]
+            prefix_len = 0
+            enc_flat = None
+
+            x = model._embed(params, tokens, dt)
+            if cfg.family == "vlm":
+                patches = batch["patch_embeds"].astype(dt)
+                x = jnp.concatenate([patches, x], axis=1)
+                prefix_len = patches.shape[1]
+                pad = jnp.full(patches.shape[:2], -1, labels.dtype)
+                labels = jnp.concatenate([pad, labels], axis=1)
+            if cfg.family == "audio":
+                enc_flat = model._encode(params, batch["frames"].astype(dt))
+
+            b, seq = x.shape[0], x.shape[1]
+            assert b % k == 0, f"batch {b} not divisible by k={k}"
+            mb = b // k
+            xs = x.reshape(k, mb, seq, x.shape[-1])
+            enc_outs = None
+            if enc_flat is not None:
+                enc_outs = enc_flat.reshape(k, mb, enc_flat.shape[1],
+                                            enc_flat.shape[2])
+            positions = jnp.arange(seq)
+
+            out, aux = pipeline_blocks(cfg, params["blocks"], xs, positions,
+                                       spec, mesh=use_mesh,
+                                       prefix_len=prefix_len,
+                                       enc_outs=enc_outs)
+            h = out.reshape(b, seq, x.shape[-1])
+            h = apply_norm(h, params["final_norm"], cfg.norm)
+            loss = model.xent(params, h, labels)
+            total = loss + 0.01 * aux
+            return total, {"xent": loss, "aux": aux}
+
+    return loss_fn

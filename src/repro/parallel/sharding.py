@@ -1,0 +1,265 @@
+"""Greedy-divisible sharding policy (DESIGN.md §7).
+
+Parameters (and mirrored optimizer state) are sharded ZeRO-3-style: for each
+tensor, mesh axes are greedily assigned to the largest array dims they
+divide, preferring the trailing (output-feature) dim for the ``model`` axis
+and any remaining large dim for ``data``/``pod``.  Nothing is ever padded by
+the policy — a dim that no axis divides is simply replicated (this is what
+makes granite's 40 experts and qwen's 20 heads work on a 16-wide axis
+without config surgery).
+
+Activations / batches / KV caches use explicit rules, not the greedy rule:
+  * token batches:  batch dim over (pod, data)
+  * hidden states:  [B, S, D] — batch over (pod, data); model axis unused
+    (attention/MLP internals are sharded through the weights)
+  * KV caches:      [B, S, H, dh] — batch over data, sequence over model
+    (sequence-parallel attention in the decode regime)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _greedy_spec(shape, axis_sizes: dict, axis_order, prefer_trailing) -> P:
+    """Assign each mesh axis to the best unassigned divisible dim."""
+    assign = [None] * len(shape)
+    for axis in axis_order:
+        size = axis_sizes[axis]
+        if size <= 1:
+            continue
+        best = None
+        # candidate dims, preference order
+        idxs = range(len(shape) - 1, -1, -1) if prefer_trailing[axis] \
+            else sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in idxs:
+            if assign[i] is None and shape[i] % size == 0 and shape[i] >= size:
+                best = i
+                break
+        if best is not None:
+            assign[best] = axis
+    return P(*assign)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Produces NamedShardings for a given mesh."""
+
+    mesh: Mesh
+    shard_params_over_pod: bool = True   # ZeRO across pods too
+    pod_is_pipeline: bool = False        # C2P2SL mode: pod = stage axis
+    pure_dp: bool = False                # attention-free regime: both mesh
+                                         # axes act as data parallelism with
+                                         # ZeRO-3 params (no TP collectives;
+                                         # EXPERIMENTS.md §Perf rwkv it3)
+
+    @property
+    def axes(self) -> dict:
+        return dict(self.mesh.shape)
+
+    @property
+    def has_pod(self) -> bool:
+        return ("pod" in self.mesh.shape and self.mesh.shape["pod"] > 1
+                and not self.pod_is_pipeline)
+
+    @property
+    def batch_axes(self) -> tuple:
+        if self.pure_dp:
+            return (("pod", "data", "model") if self.has_pod
+                    else ("data", "model"))
+        return (("pod", "data") if self.has_pod else ("data",))
+
+    # ---------------- params ----------------
+
+    # down-projections: the SECOND matmul of each Megatron pair.  model
+    # must sit on their CONTRACTION dim (d_ff / heads) to pair with the
+    # up-projection's column-parallel output — otherwise GSPMD all-gathers
+    # the full [B, S, d_ff] activation over the model axis every layer
+    # (EXPERIMENTS.md §Perf, rwkv iteration 2).
+    DOWN_PROJ = ("w2", "o", "out", "w_v", "w_o")
+
+    def param_spec(self, shape, name: str = "") -> P:
+        if len(shape) == 0:
+            return P()
+        n_model = self.axes.get("model", 1)
+        n_data = self.axes.get("data", 1)
+        if self.pure_dp:
+            # ZeRO-3 over the flattened (data x model) axes: one combined
+            # shard dim per tensor, largest divisible dim wins.
+            combo = self.batch_axes
+            n_combo = int(np.prod([self.axes[a] for a in combo]))
+            for axes, k in ((combo, n_combo), (("data",), n_data),
+                            (("model",), n_model)):
+                cands = sorted(range(len(shape)), key=lambda i: -shape[i])
+                for i in cands:
+                    if len(shape) >= 3 and i == 0:
+                        continue          # keep the stacked layer dim whole
+                    if shape[i] % k == 0 and shape[i] >= k:
+                        spec = [None] * len(shape)
+                        spec[i] = axes if len(axes) > 1 else axes[0]
+                        return P(*spec)
+            return P(*([None] * len(shape)))
+        if name in self.DOWN_PROJ and len(shape) >= 2:
+            c_dim = len(shape) - 2            # contraction dim (row-parallel)
+            o_dim = len(shape) - 1
+            spec = [None] * len(shape)
+            if shape[c_dim] % n_model == 0 and shape[c_dim] >= n_model:
+                spec[c_dim] = "model"
+                if shape[o_dim] % n_data == 0 and shape[o_dim] >= n_data:
+                    spec[o_dim] = "data"
+                return P(*spec)
+            # fall through to the greedy rule when indivisible
+        if name in ("embed", "head") and len(shape) == 2:
+            # Vocab-parallel embedding/head: the [B,S,V] logits tensor must
+            # be model-sharded or the xent chunk is vocab-replicated (the
+            # 188 GiB/device pathology — EXPERIMENTS.md §Perf iteration 0).
+            v_dim = 0 if shape[0] > shape[1] else 1
+            d_dim = 1 - v_dim
+            spec = [None, None]
+            if shape[v_dim] % n_model == 0:
+                spec[v_dim] = "model"
+                if shape[d_dim] % self.axes.get("data", 1) == 0:
+                    spec[d_dim] = "data"
+            else:                      # indivisible vocab (granite 49155)
+                if shape[d_dim] % n_model == 0:
+                    spec[d_dim] = "model"
+            return P(*spec)
+        order = ["model", "data"]
+        if self.has_pod and self.shard_params_over_pod:
+            order.append("pod")
+        prefer_trailing = {"model": True, "data": False, "pod": False}
+        return _greedy_spec(tuple(shape), self.axes, order, prefer_trailing)
+
+    def _path_spec(self, path, shape) -> P:
+        name = ""
+        in_blocks = False
+        for p in path:
+            if hasattr(p, "key"):
+                k = str(p.key)
+                if k in ("blocks", "enc_blocks"):
+                    in_blocks = True
+                if k not in ("m", "v", "mom"):
+                    name = k
+        if len(shape) == 0:
+            return P()
+        if self.pod_is_pipeline and in_blocks and len(shape) >= 1:
+            # C2P2SL: the stacked layer dim IS the stage split — shard it
+            # over 'pod' so each pod holds its own stage's layers.
+            rest = self.param_spec(shape[1:], name)
+            return P("pod", *tuple(rest))
+        return self.param_spec(shape, name)
+
+    def param_shardings(self, param_tree):
+        """Pytree of ShapeDtypeStructs/arrays -> pytree of NamedSharding."""
+        return jax.tree_util.tree_map_with_path(
+            lambda path, x: NamedSharding(self.mesh,
+                                          self._path_spec(path, x.shape)),
+            param_tree)
+
+    # ---------------- activations / data ----------------
+
+    def batch_spec(self, shape) -> P:
+        """Token / label / frontend batches: leading dim over (pod, data),
+        falling back to data-only / replicated when not divisible
+        (long_500k has global_batch=1)."""
+        ndim = len(shape)
+        if ndim == 0:
+            return P()
+        n_all = int(np.prod([self.axes[a] for a in self.batch_axes]))
+        if shape[0] % n_all == 0 and shape[0] >= n_all:
+            return P(self.batch_axes, *([None] * (ndim - 1)))
+        n_data = self.axes.get("data", 1)
+        if shape[0] % n_data == 0 and shape[0] >= n_data:
+            return P("data", *([None] * (ndim - 1)))
+        return P(*([None] * ndim))
+
+    def batch_shardings(self, batch_tree):
+        return jax.tree.map(
+            lambda x: NamedSharding(self.mesh, self.batch_spec(x.shape)),
+            batch_tree)
+
+    # ---------------- decode caches ----------------
+
+    def cache_spec(self, shape, batch: int | None = None) -> P:
+        """Decode-state sharding.
+
+        Leaves are shaped [B, ...] or layer-stacked [L, B, ...]; the batch
+        dim is located by value (``batch``) within the two leading dims and
+        sharded over (pod,) data; the widest remaining divisible dim —
+        the sequence dim for KV caches — goes to ``model``
+        (sequence-parallel attention in the decode regime).
+        """
+        if len(shape) == 0:
+            return P()
+        assign = [None] * len(shape)
+        n_batch = int(np.prod([self.axes[a] for a in self.batch_axes]))
+        b_dim = None
+        for i in range(min(2, len(shape))):
+            if batch is not None and shape[i] != batch:
+                continue
+            if shape[i] % n_batch == 0 and shape[i] >= n_batch:
+                assign[i] = self.batch_axes
+                b_dim = i
+                break
+            if shape[i] % self.axes.get("data", 1) == 0 \
+                    and shape[i] >= self.axes.get("data", 1):
+                assign[i] = "data"
+                b_dim = i
+                break
+        n_model = self.axes.get("model", 1)
+        cands = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in cands:
+            if i == b_dim or assign[i] is not None:
+                continue
+            if shape[i] % n_model == 0 and shape[i] >= n_model:
+                assign[i] = "model"
+                break
+        return P(*assign)
+
+    def cache_shardings(self, cache_tree, batch: int | None = None):
+        return jax.tree.map(
+            lambda x: NamedSharding(self.mesh,
+                                    self.cache_spec(x.shape, batch)),
+            cache_tree)
+
+    # ---------------- state assembly ----------------
+
+    def train_state_shardings(self, state_tree):
+        """{'params':…, 'opt_state':…, 'step':…} — opt state mirrors params."""
+        return jax.tree_util.tree_map_with_path(
+            lambda path, x: NamedSharding(self.mesh,
+                                          self._path_spec(path, x.shape)),
+            state_tree)
+
+
+# ---------------- feasibility (the paper's C2, datacenter form) ----------
+
+
+def bytes_per_device(tree, policy: ShardingPolicy, spec_fn=None) -> int:
+    """Max per-device bytes of a pytree under the policy (storage bound)."""
+    spec_fn = spec_fn or policy.param_spec
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shape = tuple(leaf.shape)
+        spec = spec_fn(shape)
+        shard = 1
+        for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+            if ax is None:
+                shard *= dim
+            else:
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                k = int(np.prod([policy.axes[a] for a in axes]))
+                shard *= dim // k
+        total += shard * jax.numpy.dtype(leaf.dtype).itemsize
+    return total
+
+
+HBM_PER_CHIP = 16 * 1024 ** 3          # TPU v5e: 16 GiB
+
+
+def hbm_feasible(tree, policy: ShardingPolicy, budget: float = 0.9) -> bool:
+    """C2 on TPU: sharded state must fit per-device HBM (DESIGN.md §3)."""
+    return bytes_per_device(tree, policy) <= budget * HBM_PER_CHIP

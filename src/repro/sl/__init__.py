@@ -1,0 +1,4 @@
+from repro.sl.split import SplitSpec, resnet_split, lm_split
+from repro.sl.c2p2sl import (SLState, init_sl_state, make_c2p2sl_step,
+                             shard_batch, batch_wall_time)
+from repro.sl.baselines import make_psl_step, make_epsl_step, make_sl_step

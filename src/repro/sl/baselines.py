@@ -1,0 +1,66 @@
+"""Baseline training schemes: SL [4], PSL [7], EPSL [8].
+
+Computation semantics:
+  * SL   — strictly sequential: UE i trains (with the BS) on its own batch,
+           parameters update after EVERY UE's turn (n updates per round).
+  * PSL  — all UEs in parallel on the shared BS model; one update per batch
+           (identical update to C2P2SL with k=1 — C2P2SL's equivalence
+           baseline).
+  * EPSL — PSL with last-layer gradient aggregation: the downlink activation
+           gradient is replaced by its per-UE batch mean (volume /b_i),
+           which is the paper's accuracy-for-time tradeoff.
+
+Timing comes from repro/core/schedule.py simulators.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sl.c2p2sl import make_c2p2sl_step
+from repro.sl.split import SplitSpec
+from repro.training.optim import Optimizer
+
+
+def make_psl_step(spec: SplitSpec, opt: Optimizer):
+    """PSL == C2P2SL with k=1 (no pipelining)."""
+    return make_c2p2sl_step(spec, opt, k=1)
+
+
+def make_epsl_step(spec: SplitSpec, opt: Optimizer, k: int = 1):
+    return make_c2p2sl_step(spec, opt, k=k, epsl_aggregate=True)
+
+
+def make_sl_step(spec: SplitSpec, opt: Optimizer):
+    """Sequential SL: per-UE update, one UE after another."""
+
+    def step(state_tree, xs, ys):
+        ue_params = state_tree["ue_params"]
+        bs_params = state_tree["bs_params"]
+        opt_ue = state_tree["opt_state_ue"]
+        opt_bs = state_tree["opt_state_bs"]
+        stp = state_tree["step"]
+        loss_last = jnp.float32(0.0)
+        mets_last = None
+        for i in range(len(xs)):
+            x = xs[i].reshape((-1,) + xs[i].shape[2:])
+            y = ys[i].reshape((-1,) + ys[i].shape[2:])
+
+            def loss_fn(both):
+                ue, bs = both
+                acts = spec.ue_fwd(ue, x)
+                return spec.bs_loss(bs, acts, y)
+
+            (loss, mets), (due, dbs) = jax.value_and_grad(
+                loss_fn, has_aux=True)((ue_params, bs_params))
+            ue_params, opt_ue = opt.update(due, opt_ue, ue_params, stp)
+            bs_params, opt_bs = opt.update(dbs, opt_bs, bs_params, stp)
+            loss_last = loss
+            mets_last = mets
+        out = dict(mets_last)
+        out["loss"] = loss_last
+        return {"ue_params": ue_params, "bs_params": bs_params,
+                "opt_state_ue": opt_ue, "opt_state_bs": opt_bs,
+                "step": stp + 1}, out
+
+    return step

@@ -1,0 +1,5 @@
+from repro.training.optim import Optimizer, adamw, sgd, cosine_schedule
+from repro.training.loop import (TrainState, init_state, make_train_step, fit,
+                                 resume_or_init)
+from repro.training.microbatch import microbatched_value_and_grad, split_batch
+from repro.training import checkpoint, compress, fault

@@ -1,0 +1,71 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 block-quantized all-reduce payload: each gradient tensor is quantized
+per 256-element block to int8 with an fp32 scale (~4x volume reduction on
+the data-parallel reduce).  The quantization error is fed back into the next
+step's gradient (error-feedback / EF-SGD), which keeps convergence intact —
+tests assert the error-feedback invariant, and the quickstart exposes it via
+``--compress-grads``.
+
+This generalizes what EPSL [8] does for split learning (shrink the BP
+payload) to the datacenter DP axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_len(n: int) -> int:
+    return (BLOCK - n % BLOCK) % BLOCK
+
+
+def quantize(g):
+    """fp32 tensor -> (int8 payload, fp32 scales per block, orig shape)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    pad = _pad_len(flat.shape[0])
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, g.shape
+
+
+def dequantize(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_grads(grads, error_fb):
+    """Apply EF: g' = Q(g + e); new e = (g + e) - deq(Q(...)).
+
+    Returns (quantized_grads_tree, new_error_fb_tree).  The quantized tree
+    holds (q, scale, shape) triples — what would travel the wire.
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s, shp = quantize(corrected)
+        deq = dequantize(q, s, shp)
+        return (q, s, shp), corrected - deq
+
+    pairs = jax.tree.map(one, grads, error_fb)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and \
+        isinstance(x[0], tuple)
+    qtree = jax.tree.map(lambda p: p[0], pairs, is_leaf=is_pair)
+    etree = jax.tree.map(lambda p: p[1], pairs, is_leaf=is_pair)
+    return qtree, etree
+
+
+def decompress_grads(qtree):
+    is_triple = lambda x: isinstance(x, tuple) and len(x) == 3
+    return jax.tree.map(lambda t: dequantize(*t), qtree, is_leaf=is_triple)
+
+
+def init_error_fb(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,1 @@
+from repro.utils.trees import tree_bytes, tree_count, tree_zeros_like, tree_cast

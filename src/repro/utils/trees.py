@@ -1,0 +1,35 @@
+"""Small pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_count(tree) -> int:
+    """Total number of scalar elements in a pytree of arrays."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays / ShapeDtypeStructs."""
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)

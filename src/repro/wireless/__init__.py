@@ -1,0 +1,2 @@
+from repro.wireless.channel import ChannelParams, pathloss_db, shannon_rate, ue_rates
+from repro.wireless.fleet import UE, Fleet, sample_fleet, BS_FLOPS, K_UE, K_BS, F_BS

@@ -1,0 +1,51 @@
+"""Wireless channel model of the paper (SII-B, Table I).
+
+TDMA cellular system: all UEs share bandwidth ``B``; time is divided into
+frames of length ``T`` subdivided into per-UE slots ``tau_i``.  Rates follow
+Shannon's theorem under AWGN (eqs (5)-(6)); path loss is the 3GPP-style model
+``h(d, f) = 28.0 + 22 log10(d) + 20 log10(f)`` dB used in SIV-A.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelParams:
+    """System parameters; defaults are the paper's Table I."""
+
+    bandwidth_hz: float = 100e6          # B
+    carrier_ghz: float = 3.5             # f (GHz, enters path loss)
+    frame_s: float = 10e-3               # T
+    p_bs_dbm: float = 46.0               # downlink transmit power
+    antenna_gain: float = 10.0           # G (linear)
+    noise_psd_dbm_hz: float = -174.0     # N0
+
+    @property
+    def noise_w(self) -> float:
+        return 10 ** (self.noise_psd_dbm_hz / 10) * 1e-3 * self.bandwidth_hz
+
+
+def pathloss_db(d_m, f_ghz: float):
+    """3GPP UMa-style LOS path loss (paper SIV-A), d in meters, f in GHz."""
+    d = np.asarray(d_m, dtype=np.float64)
+    return 28.0 + 22.0 * np.log10(d) + 20.0 * np.log10(f_ghz)
+
+
+def shannon_rate(p_tx_dbm, d_m, ch: ChannelParams):
+    """Achievable rate in bit/s over the full band (eqs (5)/(6))."""
+    p_w = 10 ** (np.asarray(p_tx_dbm, dtype=np.float64) / 10) * 1e-3
+    gain = 10 ** (-pathloss_db(d_m, ch.carrier_ghz) / 10)
+    snr = ch.antenna_gain * p_w * gain / ch.noise_w
+    return ch.bandwidth_hz * np.log2(1.0 + snr)
+
+
+def ue_rates(p_ue_dbm, d_m, ch: ChannelParams):
+    """(uplink, downlink) full-band rates in bit/s for each UE.
+
+    Uplink uses the UE transmit power, downlink the BS power (eq (6)).
+    """
+    r_u = shannon_rate(p_ue_dbm, d_m, ch)
+    r_d = shannon_rate(ch.p_bs_dbm, d_m, ch)
+    return r_u, r_d

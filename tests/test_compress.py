@@ -1,0 +1,65 @@
+"""Gradient compression with error feedback (repro.training.compress)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.training.compress import (compress_grads, decompress_grads,
+                                     dequantize, init_error_fb, quantize)
+
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((1000,)), jnp.float32)
+    q, s, shp = quantize(g)
+    deq = dequantize(q, s, shp)
+    # per-block max error <= scale/2 = max|block|/254
+    assert float(jnp.max(jnp.abs(deq - g))) <= float(jnp.max(jnp.abs(g))) / 254 + 1e-7
+    assert q.dtype == jnp.int8
+
+
+@settings(deadline=None, max_examples=10)
+@given(n=st.integers(1, 2000), seed=st.integers(0, 100))
+def test_quantize_shapes_property(n, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    q, s, shp = quantize(g)
+    deq = dequantize(q, s, shp)
+    assert deq.shape == g.shape
+    assert float(jnp.max(jnp.abs(deq - g))) <= \
+        float(jnp.max(jnp.abs(g))) / 200 + 1e-6
+
+
+def test_error_feedback_invariant():
+    """EF invariant: transmitted + new_error == grad + old_error exactly."""
+    rng = np.random.default_rng(1)
+    grads = {"a": jnp.asarray(rng.standard_normal((300,)), jnp.float32),
+             "b": jnp.asarray(rng.standard_normal((4, 7)), jnp.float32)}
+    efb = init_error_fb(grads)
+    efb = jax.tree.map(lambda e: e + 0.01, efb)     # non-trivial carry
+    qtree, new_efb = compress_grads(grads, efb)
+    sent = decompress_grads(qtree)
+    lhs = jax.tree.map(lambda s, e: s + e, sent, new_efb)
+    rhs = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, efb)
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), lhs, rhs)
+    assert max(jax.tree.leaves(d)) < 1e-5
+
+
+def test_error_feedback_preserves_convergence_direction():
+    """Accumulated EF-compressed grads track the true gradient sum."""
+    rng = np.random.default_rng(2)
+    true_sum = jnp.zeros((500,))
+    sent_sum = jnp.zeros((500,))
+    efb = {"g": jnp.zeros((500,), jnp.float32)}
+    for i in range(20):
+        g = jnp.asarray(rng.standard_normal((500,)) * 0.1, jnp.float32)
+        true_sum = true_sum + g
+        qtree, efb_new = compress_grads({"g": g}, efb)
+        sent_sum = sent_sum + decompress_grads(qtree)["g"]
+        efb = efb_new
+    # residual = current error carry, bounded (doesn't accumulate)
+    resid = float(jnp.max(jnp.abs(true_sum - sent_sum)))
+    assert resid == pytest.approx(float(jnp.max(jnp.abs(efb["g"]))),
+                                  abs=1e-5)
+    assert resid < 0.05

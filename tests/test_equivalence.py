@@ -1,0 +1,152 @@
+"""The paper's equivalence claim (SII-C last paragraph): micro-batched
+C2P2SL training with gradient accumulation produces the SAME update as
+full-batch PSL — tested for the actual split trainer and for the generic
+micro-batch substrate, per model family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import image_batches, lm_batch_for
+from repro.models import LM, LMConfig, resnet
+from repro.sl import (init_sl_state, make_c2p2sl_step, make_epsl_step,
+                      make_psl_step, resnet_split, shard_batch)
+from repro.training import adamw, sgd
+from repro.training.microbatch import microbatched_value_and_grad
+
+TOL = 2e-4
+
+
+def tree_close(a, b, tol=TOL):
+    d = jax.tree.map(lambda x, y: float(jnp.max(jnp.abs(x - y))), a, b)
+    worst = max(jax.tree.leaves(d))
+    assert worst < tol, f"max deviation {worst}"
+
+
+def _sl_tree(state):
+    return {"ue_params": state.ue_params, "bs_params": state.bs_params,
+            "opt_state_ue": state.opt_state_ue,
+            "opt_state_bs": state.opt_state_bs, "step": state.step}
+
+
+def test_c2p2sl_equals_psl_update():
+    """k=4 C2P2SL step == k=1 PSL step on the same ResNet batch."""
+    params = resnet.init_resnet18(jax.random.key(0))
+    spec = resnet_split(2)
+    opt = adamw(1e-3)
+    batch = next(image_batches(48, seed=0))
+    b_alloc = np.array([16, 16, 16])
+
+    out = []
+    for k, maker in [(4, make_c2p2sl_step), (1, make_psl_step)]:
+        tree = _sl_tree(init_sl_state(spec, params, opt))
+        xs, ys = shard_batch(batch["images"], batch["labels"], b_alloc, k)
+        step = maker(spec, opt, k) if maker is make_c2p2sl_step \
+            else maker(spec, opt)
+        tree, mets = jax.jit(step)(tree, xs, ys)
+        out.append(tree)
+    tree_close(out[0]["ue_params"], out[1]["ue_params"])
+    tree_close(out[0]["bs_params"], out[1]["bs_params"])
+
+
+def test_c2p2sl_equals_psl_unequal_allocation():
+    """Equivalence also holds for heterogeneous b_i (the AO allocation).
+
+    SGD (linear in the gradients) so the comparison reflects gradient
+    equality; Adam's rsqrt at step 1 amplifies 1e-7 fp noise 10^4-fold."""
+    params = resnet.init_resnet18(jax.random.key(0))
+    spec = resnet_split(1)
+    opt = sgd(0.05, momentum=0.9)
+    batch = next(image_batches(64, seed=0))
+    b_alloc = np.array([16, 8, 8, 8, 8, 8, 4, 4])
+
+    out = []
+    for k in (4, 1):
+        tree = _sl_tree(init_sl_state(spec, params, opt))
+        xs, ys = shard_batch(batch["images"], batch["labels"], b_alloc, k)
+        step = make_c2p2sl_step(spec, opt, k)
+        tree, _ = jax.jit(step)(tree, xs, ys)
+        out.append(tree)
+    tree_close(out[0]["ue_params"], out[1]["ue_params"])
+    tree_close(out[0]["bs_params"], out[1]["bs_params"])
+
+
+def test_epsl_differs():
+    """EPSL's gradient aggregation is an approximation — it must NOT match
+    the exact update (the accuracy cost in paper Fig 3)."""
+    params = resnet.init_resnet18(jax.random.key(0))
+    spec = resnet_split(2)
+    opt = adamw(1e-3)
+    batch = next(image_batches(48, seed=0))
+    b_alloc = np.array([16, 16, 16])
+
+    tree_c = _sl_tree(init_sl_state(spec, params, opt))
+    tree_e = _sl_tree(init_sl_state(spec, params, opt))
+    xs, ys = shard_batch(batch["images"], batch["labels"], b_alloc, 1)
+    tree_c, _ = jax.jit(make_psl_step(spec, opt))(tree_c, xs, ys)
+    tree_e, _ = jax.jit(make_epsl_step(spec, opt))(tree_e, xs, ys)
+    d = jax.tree.map(lambda x, y: float(jnp.max(jnp.abs(x - y))),
+                     tree_c["ue_params"], tree_e["ue_params"])
+    assert max(jax.tree.leaves(d)) > 1e-6
+
+
+FAMILY_CONFIGS = {
+    "dense": LMConfig(name="t-dense", num_layers=2, d_model=32, n_heads=4,
+                      n_kv=2, d_ff=64, vocab=64, dtype="float32"),
+    "moe": LMConfig(name="t-moe", num_layers=2, d_model=32, n_heads=4,
+                    n_kv=2, d_ff=32, vocab=64, moe_experts=4, moe_topk=2,
+                    dtype="float32"),
+    "hybrid": LMConfig(name="t-hyb", num_layers=3, d_model=32, n_heads=4,
+                       n_kv=1, d_ff=64, vocab=64, window=8,
+                       pattern=("rglru", "rglru", "local"), lru_width=32,
+                       dtype="float32"),
+    "ssm": LMConfig(name="t-rwkv", num_layers=2, d_model=32, n_heads=2,
+                    n_kv=2, d_ff=64, vocab=64, pattern=("rwkv",) * 2,
+                    rwkv_head_dim=16, rwkv_lora=8, dtype="float32"),
+}
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+def test_microbatch_grad_equivalence(family):
+    """Accumulated micro-batch grads == full-batch grads per family.
+
+    (MoE uses per-micro-batch router statistics for the aux loss — the known
+    PP x MoE interaction, DESIGN.md §6 — so only xent participates there.)
+    """
+    cfg = FAMILY_CONFIGS[family]
+    model = LM(cfg)
+    params = model.init(jax.random.key(1))
+    batch = lm_batch_for(cfg, 8, 16, seed=2)
+
+    def loss_fn(p, b):
+        loss, mets = model.forward(p, b)
+        if family == "moe":
+            return mets["xent"], mets
+        return loss, mets
+
+    vg1 = microbatched_value_and_grad(loss_fn, 1)
+    vg4 = microbatched_value_and_grad(loss_fn, 4)
+    (l1, _), g1 = jax.jit(vg1)(params, batch)
+    (l4, _), g4 = jax.jit(vg4)(params, batch)
+    # MoE capacity buckets are sized per dispatch call, so token-drop sets
+    # can differ between k=1 and k=4 — a bounded, documented deviation
+    # (DESIGN.md §6); the other families are exact.
+    loss_tol = 5e-3 if family == "moe" else 1e-4
+    grad_tol = 3e-2 if family == "moe" else 1e-3
+    assert abs(float(l1) - float(l4)) < loss_tol
+    tree_close(g1, g4, tol=grad_tol)
+
+
+def test_sgd_and_adam_updates_shapes():
+    cfg = FAMILY_CONFIGS["dense"]
+    model = LM(cfg)
+    params = model.init(jax.random.key(0))
+    batch = lm_batch_for(cfg, 4, 8)
+    for opt in (adamw(1e-3, weight_decay=0.1, grad_clip=1.0), sgd(0.1)):
+        st = opt.init(params)
+        g = jax.grad(lambda p: model.forward(p, batch)[0])(params)
+        new_p, new_st = opt.update(g, st, params, jnp.int32(0))
+        assert jax.tree.structure(new_p) == jax.tree.structure(params)
+        moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                             new_p, params)
+        assert max(jax.tree.leaves(moved)) > 0

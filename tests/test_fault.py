@@ -1,0 +1,71 @@
+"""Fault tolerance: watchdog, straggler rebalancing, elastic rescale."""
+import numpy as np
+
+from repro.core.costs import resnet18_profile
+from repro.training.fault import Watchdog, plan_rescale, rebalance_batches
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_watchdog_detects_dead_worker():
+    clock = FakeClock()
+    wd = Watchdog(4, timeout_s=10.0, clock=clock)
+    clock.t = 5.0
+    for i in (0, 1, 2):
+        wd.heartbeat(i)
+    clock.t = 12.0
+    assert wd.dead_workers() == [3]
+
+
+def test_watchdog_straggler_detection():
+    clock = FakeClock()
+    wd = Watchdog(4, clock=clock)
+    for i, t in enumerate([1.0, 1.1, 0.9, 5.0]):
+        wd.heartbeat(i, step_time=t)
+    assert wd.stragglers(factor=2.0) == [3]
+
+
+def test_rebalance_proportional_to_speed():
+    thr = np.array([1.0, 1.0, 4.0])     # worker 2 is 4x faster
+    b = rebalance_batches(thr, 48, multiple=2)
+    assert b.sum() == 48
+    assert b[2] > b[0] and b[2] > b[1]
+    assert np.all(b % 2 == 0)
+
+
+def test_rebalance_after_straggler_cuts_makespan():
+    """End-to-end: re-allocating batch away from a compute straggler
+    reduces the simulated batch time (the paper's P3 as a straggler
+    policy).  The fleet is crafted compute-bound (one 10x-slower UE,
+    identical channels), the regime where speed-proportional re-balancing
+    is provably right; comm-bound fleets instead go through the full LP
+    (repro.core.ao.solve_batch_p3)."""
+    from repro.core.schedule import Plan, simulate_c2p2sl, task_times
+    from repro.wireless.channel import ChannelParams
+    from repro.wireless.fleet import UE, Fleet
+    prof = resnet18_profile()
+    ch = ChannelParams(bandwidth_hz=1e9)      # fat pipe: compute-bound
+    mk = lambda clock: UE(clock_hz=clock, p_tx_dbm=20.0, distance_m=150.0,
+                          storage_flops=1e12)
+    fleet = Fleet(ues=(mk(2e9), mk(2e9), mk(2e9), mk(0.2e9)), channel=ch)
+    tau = np.full(4, ch.frame_s / 4)
+    uniform = Plan(l=2, k=4, b=np.full(4, 32.0), tau=tau)
+    t_uni = task_times(prof, fleet, uniform)
+    ms_uni, _ = simulate_c2p2sl(t_uni, 4)
+    thr = 1.0 / np.maximum(t_uni.ue_fwd + t_uni.uplink, 1e-9)
+    b_new = rebalance_batches(thr, 128, multiple=4).astype(float)
+    t_reb = task_times(prof, fleet, Plan(l=2, k=4, b=b_new, tau=tau))
+    ms_reb, _ = simulate_c2p2sl(t_reb, 4)
+    assert ms_reb < ms_uni
+
+
+def test_plan_rescale():
+    assert plan_rescale({"pod": 4, "data": 16, "model": 16}, 1) == \
+        {"pod": 3, "data": 16, "model": 16}
+    assert plan_rescale({"pod": 1, "data": 16, "model": 16}, 3)["pod"] == 1

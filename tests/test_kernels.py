@@ -1,0 +1,183 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (hypothesis) +
+directed cases.  All kernels run in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.ref import (attention_ref, moe_gmm_ref, rg_lru_ref,
+                               wkv6_ref)
+from repro.kernels.rglru import rglru_scan
+from repro.kernels.rwkv6 import wkv6
+from repro.models.recurrent import rg_lru_scan_chunked
+from repro.models.rwkv import wkv6_chunked
+
+RNG = np.random.default_rng(42)
+
+
+def randn(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------- flash
+
+@settings(deadline=None, max_examples=12)
+@given(
+    b=st.integers(1, 3),
+    hkv=st.sampled_from([1, 2]),
+    rep=st.sampled_from([1, 2, 3]),
+    s_blocks=st.integers(1, 3),
+    dh=st.sampled_from([64, 128]),
+    causal=st.booleans(),
+)
+def test_flash_attention_sweep(b, hkv, rep, s_blocks, dh, causal):
+    s = 128 * s_blocks
+    q = randn((b, hkv * rep, s, dh))
+    k = randn((b, hkv, s, dh))
+    v = randn((b, hkv, s, dh))
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_window():
+    q = randn((1, 2, 256, 64))
+    k = randn((1, 2, 256, 64))
+    v = randn((1, 2, 256, 64))
+    out = flash_attention(q, k, v, causal=True, window=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    q = randn((1, 2, 128, 64), jnp.bfloat16)
+    k = randn((1, 2, 128, 64), jnp.bfloat16)
+    v = randn((1, 2, 128, 64), jnp.bfloat16)
+    out = flash_attention(q, k, v, interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------- rglru
+
+@settings(deadline=None, max_examples=10)
+@given(
+    b=st.integers(1, 3),
+    s_chunks=st.integers(1, 3),
+    r_blocks=st.integers(1, 2),
+    with_h0=st.booleans(),
+)
+def test_rglru_sweep(b, s_chunks, r_blocks, with_h0):
+    s, r = 256 * s_chunks, 128 * r_blocks
+    x = randn((b, s, r))
+    la = jnp.asarray(-np.exp(RNG.uniform(-5, 0, (b, s, r))), jnp.float32)
+    h0 = randn((b, r), scale=0.2) if with_h0 else None
+    h, last = rglru_scan(x, la, h0, interpret=True)
+    h_ref, last_ref = rg_lru_ref(x, la, h0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(last_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_chunked_jnp_matches_ref():
+    """The model's chunked scan (the kernel's oracle) matches sequential."""
+    x = randn((2, 300, 64))
+    la = jnp.asarray(-np.exp(RNG.uniform(-4, 0, (2, 300, 64))), jnp.float32)
+    h, last = rg_lru_scan_chunked(x, la, chunk=128)
+    h_ref, last_ref = rg_lru_ref(x, la)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- wkv6
+
+@settings(deadline=None, max_examples=8)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 3),
+    s_chunks=st.integers(1, 3),
+    dh=st.sampled_from([32, 64]),
+    strong_decay=st.booleans(),
+)
+def test_wkv6_sweep(b, h, s_chunks, dh, strong_decay):
+    s = 64 * s_chunks
+    r = randn((b, s, h, dh))
+    k = randn((b, s, h, dh))
+    v = randn((b, s, h, dh))
+    lo = -3.0 if strong_decay else -6.0
+    w = jnp.asarray(np.exp(-np.exp(RNG.uniform(lo, 0.5, (b, s, h, dh)))),
+                    jnp.float32)
+    u = randn((h, dh), scale=0.2)
+    s0 = randn((b, h, dh, dh), scale=0.1)
+    out, fin = wkv6(r, k, v, w, u, s0, interpret=True)
+    out_ref, fin_ref = wkv6_ref(r, k, v, w, u, s0=s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(fin_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_wkv6_chunked_jnp_grads_match_scan():
+    """The chunked formulation is the training path: grads must match the
+    step-by-step recurrence."""
+    b, s, h, dh = 1, 96, 2, 16
+    r = randn((b, s, h, dh))
+    k = randn((b, s, h, dh))
+    v = randn((b, s, h, dh))
+    w = jnp.asarray(np.exp(-np.exp(RNG.uniform(-3, 0.5, (b, s, h, dh)))),
+                    jnp.float32)
+    u = randn((h, dh), scale=0.2)
+    from repro.models.rwkv import wkv6_scan
+    g1 = jax.grad(lambda r: wkv6_scan(r, k, v, w, u)[0].sum())(r)
+    g2 = jax.grad(lambda r: wkv6_chunked(r, k, v, w, u, chunk=32)[0].sum())(r)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------- moe gmm
+
+@settings(deadline=None, max_examples=8)
+@given(
+    e=st.integers(1, 4),
+    c_blocks=st.integers(1, 2),
+    d=st.sampled_from([256, 512]),
+    f=st.sampled_from([128, 256]),
+)
+def test_moe_gmm_sweep(e, c_blocks, d, f):
+    c = 128 * c_blocks
+    h = randn((e, c, d), scale=0.5)
+    w = randn((e, d, f), scale=0.05)
+    out = moe_gmm(h, w, interpret=True)
+    ref = moe_gmm_ref(h, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_gmm_bf16():
+    h = randn((2, 128, 256), jnp.bfloat16)
+    w = randn((2, 256, 128), jnp.bfloat16, scale=0.1)
+    out = moe_gmm(h, w, interpret=True)
+    ref = moe_gmm_ref(h, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_ops_wrappers_jit():
+    """The public jit'd wrappers compile and run."""
+    q = randn((1, 2, 128, 64))
+    o = ops.flash_attention(q, q, q)
+    assert o.shape == q.shape
+    x = randn((1, 256, 128))
+    la = -jnp.abs(randn((1, 256, 128))) - 0.01
+    h, last = ops.rglru_scan(x, la)
+    assert h.shape == x.shape and last.shape == (1, 128)

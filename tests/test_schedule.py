@@ -1,0 +1,127 @@
+"""Pipeline schedule & bubble-rate accounting (paper SII-C, SIII-A)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costs import lm_profile, resnet18_profile
+from repro.core.schedule import (Plan, bubble_rate, simulate_c2p2sl,
+                                 simulate_epsl, simulate_psl, simulate_sl,
+                                 steady_state_ok, task_times)
+from repro.wireless.fleet import sample_fleet
+
+
+def make_plan(n=4, batch=64, l=2, k=4, seed=0):
+    fleet = sample_fleet(n, seed=seed)
+    b = np.full(n, batch // n, dtype=float)
+    tau = np.full(n, fleet.channel.frame_s / n)
+    return fleet, Plan(l=l, k=k, b=b, tau=tau)
+
+
+def test_table2_profile_matches_paper():
+    prof = resnet18_profile()
+    assert prof.num_layers == 6
+    # Table II traffic column (MB) at each cut
+    assert prof.cut_bytes(1) == pytest.approx(0.250 * 2**20)
+    assert prof.cut_bytes(4) == pytest.approx(0.063 * 2**20)
+    # FLOPs columns
+    assert prof.ue_fwd(2) == pytest.approx((3.802 + 303.0) * 1e6)
+    assert prof.bs_fwd(2) == pytest.approx((269.1 + 268.8 + 268.6 + 0.026) * 1e6)
+
+
+def test_task_times_scale_with_k():
+    prof = resnet18_profile()
+    fleet, plan = make_plan(k=1)
+    t1 = task_times(prof, fleet, plan)
+    t4 = task_times(prof, fleet, Plan(l=plan.l, k=4, b=plan.b, tau=plan.tau))
+    # eqs (7)-(12): every per-micro-batch time scales as 1/k
+    np.testing.assert_allclose(t1.ue_fwd, 4 * t4.ue_fwd)
+    np.testing.assert_allclose(t1.uplink, 4 * t4.uplink)
+    assert t1.bs_fwd == pytest.approx(4 * t4.bs_fwd)
+    assert t1.downlink[0] == pytest.approx(4 * t4.downlink[0])
+
+
+def test_bubble_rate_definition():
+    prof = resnet18_profile()
+    fleet, plan = make_plan(k=4)
+    t = task_times(prof, fleet, plan)
+    br = bubble_rate(t, plan.k)
+    t_idle = np.max(t.ue_fwd + t.uplink) + np.max(t.downlink + t.ue_bwd)
+    t_work = plan.k * (t.bs_fwd + t.bs_bwd)
+    assert br == pytest.approx(t_idle / (t_idle + t_work))
+    assert 0.0 < br < 1.0
+
+
+def test_c2p2sl_beats_psl_with_pipelining():
+    """The paper's core claim: micro-batch pipelining shrinks the makespan."""
+    prof = resnet18_profile()
+    fleet, plan = make_plan(n=8, batch=512, l=1, k=8)
+    t = task_times(prof, fleet, plan)
+    ms, _ = simulate_c2p2sl(t, plan.k)
+    t1 = task_times(prof, fleet, Plan(l=plan.l, k=1, b=plan.b, tau=plan.tau))
+    psl = simulate_psl(t1)
+    assert ms < psl
+
+
+def test_c2p2sl_k1_equals_psl():
+    """k=1 C2P2SL degenerates exactly to PSL (no pipelining)."""
+    prof = resnet18_profile()
+    fleet, plan = make_plan(n=4, batch=64, l=2, k=1)
+    t1 = task_times(prof, fleet, plan)
+    ms, _ = simulate_c2p2sl(t1, 1)
+    assert ms == pytest.approx(simulate_psl(t1), rel=1e-9)
+
+
+def test_sl_slowest():
+    """Sequential SL is the slowest scheme (paper Fig 4 ordering)."""
+    prof = resnet18_profile()
+    fleet, plan = make_plan(n=4, batch=64, l=2, k=4)
+    t = task_times(prof, fleet, plan)
+    ms_c2, _ = simulate_c2p2sl(t, plan.k)
+    sl = simulate_sl(prof, fleet, plan)
+    assert sl > ms_c2
+
+
+def test_epsl_faster_than_psl():
+    prof = resnet18_profile()
+    fleet, plan = make_plan(n=4, batch=64, l=2, k=1)
+    t1 = task_times(prof, fleet, plan)
+    assert simulate_epsl(t1, fleet.n) < simulate_psl(t1)
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    n=st.integers(2, 10),
+    l=st.integers(1, 5),
+    k=st.integers(1, 16),
+    seed=st.integers(0, 100),
+)
+def test_makespan_lower_bound_property(n, l, k, seed):
+    """Property: the makespan is never below the BS's pure work time, and
+    the timeline is consistent (end >= start, tasks ordered per actor)."""
+    prof = resnet18_profile()
+    fleet = sample_fleet(n, seed=seed)
+    b = np.full(n, 8.0 * k)
+    tau = np.full(n, fleet.channel.frame_s / n)
+    t = task_times(prof, fleet, Plan(l=l, k=k, b=b, tau=tau))
+    ms, tl = simulate_c2p2sl(t, k, collect_timeline=True)
+    assert ms >= k * (t.bs_fwd + t.bs_bwd) - 1e-12
+    for actor in {e[0] for e in tl}:
+        events = [e for e in tl if e[0] == actor]
+        for (_, _, _, s, e) in events:
+            assert e >= s - 1e-12
+
+
+@settings(deadline=None, max_examples=20)
+@given(k=st.integers(2, 32), seed=st.integers(0, 50))
+def test_more_microbatches_never_hurt_when_steady(k, seed):
+    """When C3/C4 hold, pipelining with k micro-batches beats k=1."""
+    prof = resnet18_profile()
+    fleet = sample_fleet(4, seed=seed)
+    b = np.full(4, 16.0 * k)
+    tau = np.full(4, fleet.channel.frame_s / 4)
+    tk = task_times(prof, fleet, Plan(l=1, k=k, b=b, tau=tau))
+    t1 = task_times(prof, fleet, Plan(l=1, k=1, b=b, tau=tau))
+    if steady_state_ok(tk, k):
+        ms_k, _ = simulate_c2p2sl(tk, k)
+        ms_1, _ = simulate_c2p2sl(t1, 1)
+        assert ms_k <= ms_1 + 1e-9

@@ -1,0 +1,111 @@
+"""Greedy-divisible sharding policy invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch, param_specs
+from repro.parallel.sharding import ShardingPolicy, bytes_per_device
+
+# an abstract 2x16x16 mesh — no devices needed for spec math
+MESH = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+SP = ShardingPolicy(MESH)
+SP_PIPE = ShardingPolicy(MESH, pod_is_pipeline=True)
+
+
+def axes_of(spec):
+    out = []
+    for e in spec:
+        if e is None:
+            continue
+        out.extend(e if isinstance(e, tuple) else (e,))
+    return out
+
+
+@settings(deadline=None, max_examples=60)
+@given(shape=st.lists(st.sampled_from([1, 2, 3, 5, 8, 16, 20, 24, 40, 96,
+                                       128, 512, 2560, 49155, 151936]),
+                      min_size=0, max_size=4))
+def test_param_spec_always_divisible(shape):
+    """Property: every assigned axis divides its dim; no axis repeats."""
+    spec = SP.param_spec(tuple(shape))
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    seen = []
+    for dim, entry in zip(shape, tuple(spec)):
+        if entry is None:
+            continue
+        for ax in (entry if isinstance(entry, tuple) else (entry,)):
+            assert dim % sizes[ax] == 0, (shape, spec)
+            seen.append(ax)
+    assert len(seen) == len(set(seen))
+
+
+def test_embed_vocab_parallel():
+    """embed/head leaves get vocab over model (the 188 GiB lesson)."""
+    spec = SP.param_spec((256_000, 2560), name="embed")
+    assert tuple(spec)[0] == "model"
+    spec = SP.param_spec((2560, 256_000), name="head")
+    assert tuple(spec)[1] == "model"
+    # indivisible vocab (granite): model falls back to d_model
+    spec = SP.param_spec((49_155, 1536), name="embed")
+    assert tuple(spec)[0] is None and tuple(spec)[1] == "model"
+
+
+def test_cache_spec_finds_batch_dim():
+    # stacked KV cache [L, B, S, H, dh]
+    spec = SP.cache_spec((32, 128, 32768, 8, 128), batch=128)
+    entries = tuple(spec)
+    assert entries[1] == ("pod", "data")
+    assert "model" in entries      # sequence dim sharded
+    # batch=1 (long_500k): nothing shards on batch
+    spec = SP.cache_spec((32, 1, 524288, 1, 256), batch=1)
+    assert tuple(spec)[2] == "model"
+
+
+def test_batch_spec_fallbacks():
+    assert tuple(SP.batch_spec((256, 4096)))[0] == ("pod", "data")
+    assert tuple(SP.batch_spec((16, 4096)))[0] == "data"   # 16 < 32
+    assert tuple(SP.batch_spec((1, 1)))[0] is None
+
+
+def test_pipeline_policy_blocks_over_pod():
+    p = param_specs(get_arch("qwen1.5-4b").smoke)
+    sh = SP_PIPE.param_shardings(p)
+    blk = jax.tree.leaves(sh["blocks"])[0]
+    assert tuple(blk.spec)[0] == "pod"
+    # non-block params never use pod in pipeline mode
+    assert "pod" not in axes_of(sh["embed"].spec)
+
+
+def test_bytes_per_device():
+    tree = {"w": jax.ShapeDtypeStruct((256, 512), jnp.float32)}
+    sp = ShardingPolicy(jax.sharding.AbstractMesh((16, 16),
+                                                  ("data", "model")))
+    n = bytes_per_device(tree, sp)
+    # greedy: model->512 (trailing), data->256: fully sharded 256-way
+    assert n == 256 * 512 * 4 // 256
+
+
+def test_hbm_feasibility_check():
+    from repro.parallel.sharding import hbm_feasible
+    small = {"w": jax.ShapeDtypeStruct((1024, 1024), jnp.float32)}
+    sp = ShardingPolicy(jax.sharding.AbstractMesh((16, 16),
+                                                  ("data", "model")))
+    assert hbm_feasible(small, sp)
+
+
+@pytest.mark.parametrize("arch", ["command-r-plus-104b", "qwen3-moe-30b-a3b"])
+def test_full_state_fits_hbm(arch):
+    """C2 on TPU: fp32 master + adam moments sharded on the single-pod mesh
+    stay under the 16 GiB/chip budget for the largest assigned archs."""
+    from repro.training.optim import adamw
+    cfg = get_arch(arch).full
+    p = param_specs(cfg)
+    opt_s = jax.eval_shape(adamw(1e-4).init, p)
+    sp = ShardingPolicy(jax.sharding.AbstractMesh((16, 16),
+                                                  ("data", "model")))
+    state = {"params": p, "opt_state": opt_s}
+    per_dev = bytes_per_device(state, sp)
+    assert per_dev < 8 * 1024**3, f"{arch}: {per_dev/2**30:.1f} GiB"

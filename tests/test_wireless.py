@@ -1,0 +1,54 @@
+"""Wireless channel model (paper SII-B, Table I)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.wireless.channel import (ChannelParams, pathloss_db, shannon_rate,
+                                    ue_rates)
+from repro.wireless.fleet import BS_FLOPS, K_BS, K_UE, sample_fleet
+
+
+def test_pathloss_formula():
+    # h(d, f) = 28 + 22 log10(d) + 20 log10(f)
+    assert pathloss_db(100.0, 3.5) == pytest.approx(
+        28.0 + 22.0 * 2.0 + 20.0 * np.log10(3.5))
+
+
+def test_rate_monotonic_in_distance():
+    ch = ChannelParams()
+    r_near = shannon_rate(20.0, 100.0, ch)
+    r_far = shannon_rate(20.0, 500.0, ch)
+    assert r_near > r_far > 0
+
+
+def test_rate_monotonic_in_power_and_bandwidth():
+    ch100 = ChannelParams(bandwidth_hz=100e6)
+    ch300 = ChannelParams(bandwidth_hz=300e6)
+    assert shannon_rate(23.0, 200.0, ch100) > shannon_rate(13.0, 200.0, ch100)
+    assert shannon_rate(20.0, 200.0, ch300) > shannon_rate(20.0, 200.0, ch100)
+
+
+def test_downlink_faster_than_uplink():
+    """BS transmits at 46 dBm vs UE 13-23 dBm => downlink rate is higher."""
+    ch = ChannelParams()
+    r_u, r_d = ue_rates(np.array([23.0]), np.array([300.0]), ch)
+    assert r_d[0] > r_u[0]
+
+
+def test_table1_compute_constants():
+    assert K_UE == 16.0 and K_BS == 32.0
+    assert BS_FLOPS == pytest.approx(32.0 * 80e9)
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(1, 16), seed=st.integers(0, 10_000))
+def test_fleet_sampling_ranges(n, seed):
+    fleet = sample_fleet(n, seed=seed)
+    assert fleet.n == n
+    for ue in fleet.ues:
+        assert 1e9 <= ue.clock_hz <= 2e9          # Table I F_i
+        assert 13.0 <= ue.p_tx_dbm <= 23.0        # p_i
+        assert 100.0 <= ue.distance_m <= 500.0    # d_i
+        assert 1e9 <= ue.storage_flops <= 2e9     # c_i
+    r_u, r_d = fleet.rates()
+    assert np.all(r_u > 0) and np.all(r_d > 0)
