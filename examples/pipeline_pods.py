@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.core.ao import lemma1_k  # noqa: F401  (k selection, see below)
 from repro.data import lm_batch_for
 from repro.models import LM, LMConfig
+from repro.parallel.compat import make_mesh, mesh_context
 from repro.parallel.pipeline import PipelineSpec, make_pipelined_loss
 from repro.parallel.sharding import ShardingPolicy
 from repro.training import adamw
@@ -29,8 +30,7 @@ def main():
     params = model.init(jax.random.key(0))
     batch = lm_batch_for(cfg, 16, 64)
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     print(f"mesh: {dict(mesh.shape)} over {mesh.size} devices")
 
     # stage split: UE-side = first L/2 layers on pod 0, BS-side on pod 1;
@@ -40,7 +40,7 @@ def main():
     loss_fn = make_pipelined_loss(model, spec, mesh=mesh)
 
     loss_plain, _ = model.forward(params, batch)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         loss_pipe, _ = jax.jit(loss_fn)(params, batch)
     print(f"loss plain {float(loss_plain):.6f} == pipelined "
           f"{float(loss_pipe):.6f} "
@@ -62,7 +62,7 @@ def main():
         return {"params": new_p, "opt_state": new_o,
                 "step": state["step"] + 1}, loss
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         for i in range(5):
             state, loss = train_step(state, batch)
             print(f"pipelined step {i}: loss {float(loss):.4f}")

@@ -365,3 +365,15 @@ def analyze(text: str, top_n: int = 0, pod_size: int = 256,
         out["top_traffic"] = sorted(contrib_t, reverse=True)[:top_n]
         out["top_coll"] = sorted(contrib_c, reverse=True)[:top_n]
     return out
+
+
+def flat_cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as one flat dict, across JAX versions.
+
+    These are the trip-count-UNAWARE numbers (each while body counted
+    once) that ``analyze`` corrects; they're retained in dry-run records
+    for reference.  Legacy JAX returns a list of per-program dicts, new
+    JAX a dict — normalization lives in parallel/compat.py.
+    """
+    from repro.parallel.compat import cost_analysis_dict
+    return cost_analysis_dict(compiled)

@@ -31,6 +31,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.hlo_costs import flat_cost_analysis
 from repro.analysis.roofline import model_flops_for, roofline_from_compiled
 from repro.configs import SHAPES, ARCHS, get_arch, input_specs, param_specs
 from repro.launch.mesh import make_production_mesh
@@ -136,7 +137,7 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
-    ca_flat = compiled.cost_analysis()
+    ca_flat = flat_cost_analysis(compiled)
     terms = roofline_from_compiled(
         compiled, chips=chips, model_flops=model_flops_for(cfg, shape),
         hlo_text=hlo)

@@ -64,6 +64,11 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1,
                     help="the paper's k (gradient accumulation)")
+    ap.add_argument("--pipeline-stages", type=int, default=0,
+                    help="S>1: run the block stack as a C2P2SL pipeline "
+                         "over a pod axis of S local devices")
+    ap.add_argument("--pipeline-k", type=int, default=4,
+                    help="micro-batches per pipelined batch")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=20)
@@ -87,8 +92,22 @@ def main(argv=None):
             state = ckpt_lib.restore(args.ckpt_dir, last, state)
             print(f"resumed from step {last}")
 
+    pipeline = None
+    mesh = None
+    if args.pipeline_stages > 1:
+        if args.microbatches != 1:
+            raise SystemExit(
+                "--microbatches (gradient accumulation) and "
+                "--pipeline-stages are mutually exclusive: the pipeline "
+                "micro-batches with --pipeline-k instead")
+        from repro.launch.mesh import make_host_mesh
+        from repro.parallel.pipeline import PipelineSpec
+        mesh = make_host_mesh(pod=args.pipeline_stages)
+        pipeline = PipelineSpec(num_stages=args.pipeline_stages,
+                                microbatches=args.pipeline_k)
     step_fn = jax.jit(make_lm_train_step(model, opt,
-                                         microbatches=args.microbatches))
+                                         microbatches=args.microbatches,
+                                         pipeline=pipeline, mesh=mesh))
     it = build_batch_iter(cfg, args.batch, args.seq, args.seed)
 
     history = []

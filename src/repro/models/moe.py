@@ -18,9 +18,10 @@ import math
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.models.common import activation, dense_init
+from repro.parallel import compat
+from repro.parallel.compat import PartitionSpec as P
 from repro.parallel.context import get_ctx
 
 
@@ -116,12 +117,12 @@ def apply_moe(params, x, *, topk: int, cap_factor: float, act: str):
             aux = jax.lax.pmean(aux, batch_axes + model_axes)
             return out.reshape(xs.shape), aux
 
-        fn = jax.shard_map(
-            shard_fn, mesh=ctx.mesh,
+        fn = compat.shard_map(
+            shard_fn, ctx.mesh,
             in_specs=(P(batch_axes, ctx.seq_axes), P(None), P(None),
                       P(None), P(None)),
             out_specs=(P(batch_axes, ctx.seq_axes), P()),
-            check_vma=False)
+            check=False)
         return fn(x, params["router"], params["w1"], params["w3"],
                   params["w2"])
 
@@ -141,9 +142,9 @@ def apply_moe(params, x, *, topk: int, cap_factor: float, act: str):
 
     w_spec = P(None, None, model_axes) if model_axes else P(None)
     w2_spec = P(None, model_axes, None) if model_axes else P(None)
-    fn = jax.shard_map(
-        shard_fn, mesh=ctx.mesh,
+    fn = compat.shard_map(
+        shard_fn, ctx.mesh,
         in_specs=(P(batch_axes), P(None), w_spec, w_spec, w2_spec),
         out_specs=(P(batch_axes), P()),
-        check_vma=False)
+        check=False)
     return fn(x, params["router"], params["w1"], params["w3"], params["w2"])

@@ -13,12 +13,25 @@ that stream through the stages.  The mapping:
     downlink (DT)    -> the autodiff transpose of the forward ppermute
     gradient accumulation over k micro-batches -> the scan's grad sum
 
-Implementation: a ``shard_map`` manual over ``pod`` only (data/model axes
-stay GSPMD-auto), with a ``lax.scan`` over ``k + S - 1`` pipeline ticks.
-At tick t, stage s processes micro-batch ``t - s``; outputs move to stage
-``s+1`` via ``ppermute`` — XLA's latency-hiding scheduler overlaps the
-transfer with the next tick's compute, which is exactly the paper's
+Implementation: a ``shard_map`` over the ``spec.axis`` ('pod') with a
+``lax.scan`` over ``k + S - 1`` pipeline ticks.  At tick t, stage s
+processes micro-batch ``t - s``; outputs move to stage ``s+1`` via
+``ppermute`` — XLA's latency-hiding scheduler overlaps the transfer with
+the next tick's compute, which is exactly the paper's
 communication/computation overlap.
+
+Version portability (all probing in ``parallel/compat.py``):
+
+  * On explicit-sharding JAX the region is Manual over 'pod' ONLY —
+    data/model axes stay GSPMD-auto inside the stage, with an explicit
+    constraint anchoring the micro-batch to the data axis (without it
+    GSPMD replicates the micro-batch across the 16-wide data axis — 16x
+    redundant compute; EXPERIMENTS.md §Perf, pipeline iteration 1).
+  * On legacy JAX (0.4.x) Manual-over-a-subset aborts inside the XLA SPMD
+    partitioner, so the region is fully manual: the micro-batch dim is
+    explicitly sharded over 'data' (when divisible) and stage weights are
+    replicated over the remaining axes.  Numerically identical; the model
+    axis does redundant compute inside pipeline stages on that generation.
 
 Embedding and LM head run replicated across pods (negligible FLOP share);
 the ppermuted tensor is the cut-layer activation — the paper's ``s_l``.
@@ -26,14 +39,14 @@ the ppermuted tensor is the cut-layer activation — the paper's ``s_l``.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.models.blocks import apply_block
 from repro.models.common import apply_norm
+from repro.parallel import compat
+from repro.parallel.compat import PartitionSpec as P
 from repro.parallel.context import ParallelCtx, use_ctx
 
 
@@ -43,15 +56,40 @@ class PipelineSpec:
     microbatches: int = 4        # k — pick with repro.core.ao.lemma1_k
     axis: str = "pod"
 
+    @classmethod
+    def auto_k(cls, stage_compute_s: float, link_s: float, *,
+               num_stages: int = 2, k_cap: int = 16, axis: str = "pod"):
+        """Spec with k chosen by the paper's Lemma 1 closed form
+        (repro.core.ao.pipeline_k_auto) from per-stage compute time and
+        inter-stage link time."""
+        from repro.core.ao import pipeline_k_auto
+        k = pipeline_k_auto(stage_compute_s, link_s, k_cap=k_cap)
+        return cls(num_stages=num_stages, microbatches=k, axis=axis)
+
 
 def _split_stages(blocks, num_stages: int):
     """[L, ...] stacked block params -> [S, L/S, ...]."""
     def r(a):
         l = a.shape[0]
-        assert l % num_stages == 0, (
-            f"num_layers {l} not divisible by {num_stages} stages")
+        if l % num_stages != 0:
+            raise ValueError(
+                f"num_layers {l} not divisible by {num_stages} pipeline "
+                "stages — pick S dividing the layer count")
         return a.reshape((num_stages, l // num_stages) + a.shape[1:])
     return jax.tree.map(r, blocks)
+
+
+def _check_mesh(mesh, spec: PipelineSpec):
+    if spec.axis not in mesh.shape:
+        raise ValueError(
+            f"pipeline axis {spec.axis!r} not in mesh axes "
+            f"{tuple(mesh.shape)} — build the mesh with a "
+            f"{spec.axis!r} axis (launch/mesh.py)")
+    if mesh.shape[spec.axis] != spec.num_stages:
+        raise ValueError(
+            f"num_stages={spec.num_stages} must equal the {spec.axis!r} "
+            f"mesh axis size {mesh.shape[spec.axis]} (one stage per "
+            f"{spec.axis} shard)")
 
 
 def pipeline_blocks(cfg, blocks, xs, positions, spec: PipelineSpec, *,
@@ -62,33 +100,28 @@ def pipeline_blocks(cfg, blocks, xs, positions, spec: PipelineSpec, *,
     xs:     [k, mb, seq, d] micro-batched activations (embedded)
     enc_outs: optional [k, mb, enc_seq, d] (whisper cross-attention memory)
     Returns (hidden [k, mb, seq, d], aux_loss scalar).
+
+    The aux loss is the per-layer sum averaged over the k micro-batches —
+    the same normalization as the plain (full-batch) forward, up to the
+    documented per-micro-batch router-statistics deviation (DESIGN.md §6).
     """
-    kind = cfg.layer_kinds[0]
+    _check_mesh(mesh, spec)
+    staged = _split_stages(blocks, spec.num_stages)
     k = xs.shape[0]
-    s_stages = spec.num_stages
-    ticks = k + s_stages - 1
-    staged = _split_stages(blocks, s_stages)
+    run = (_pipeline_partial_manual if compat.CAPS.partial_manual
+           else _pipeline_full_manual)
+    outs, auxes = run(cfg, staged, xs, positions, spec, mesh,
+                      prefix_len, enc_outs)
+    # last stage's real outputs; aux summed over stages (each owns its own
+    # layers' aux), averaged over micro-batches
+    return outs[-1], auxes.sum() / k
 
-    from jax.sharding import AxisType, NamedSharding
-    # constraint mesh view: pod is Manual inside this region, rest Auto
-    abs_mesh = mesh.abstract_mesh.update(axis_types=tuple(
-        AxisType.Manual if n == spec.axis else AxisType.Auto
-        for n in mesh.shape))
-    # micro-batch over data; seq deliberately NOT model-sharded inside the
-    # stage: per-micro-batch SP re-gathers the stage weights and re-reduces
-    # weight grads k times (refuted, EXPERIMENTS.md §Perf pipeline it2) —
-    # without SP, GSPMD defers the weight-grad reduction across ticks.
-    data_spec = NamedSharding(abs_mesh, P("data"))
 
-    def pin(x):
-        """Anchor the micro-batch dim to the data axis INSIDE the manual-
-        over-pod region — without this GSPMD replicates the micro-batch
-        across the 16-wide data axis (16x redundant compute; EXPERIMENTS.md
-        §Perf, pipeline iteration 1)."""
-        return jax.lax.with_sharding_constraint(x, data_spec)
+def _stage_scan_fn(cfg, spec, positions, prefix_len):
+    """One stage's block scan on one micro-batch (shared by both paths)."""
+    kind = cfg.layer_kinds[0]
 
-    def stage_scan(blocks_local, x, enc_out):
-        """One stage's block scan on one micro-batch."""
+    def stage_scan(blocks_local, x, enc_out, pin):
         def body(carry, layer_params):
             y, aux = apply_block(layer_params, carry, cfg, kind,
                                  positions=positions, prefix_len=prefix_len,
@@ -98,45 +131,140 @@ def pipeline_blocks(cfg, blocks, xs, positions, spec: PipelineSpec, *,
         y, auxes = jax.lax.scan(jax.checkpoint(body), pin(x), blocks_local)
         return y, auxes.sum()
 
+    return stage_scan
+
+
+def _tick_loop(spec, stage, k, xs_full, enc_full, state0, aux0, run_stage):
+    """The 1F1B tick schedule shared by both shard_map flavours.
+
+    At tick t stage s computes micro-batch ``t - s`` (clipped; masked by
+    ``live``), then ppermutes its output one stage forward.  Works for any
+    S >= 1 and k >= 1: ticks = k + S - 1, warm-up/drain handled by the
+    live mask, so ``pipeline_k_auto``-chosen k needs no divisibility with
+    the stage count.
+    """
+    s_stages = spec.num_stages
+    ticks = k + s_stages - 1
+    perm = [(i, i + 1) for i in range(s_stages - 1)]
+
+    def tick(carry, t):
+        state, aux_acc = carry
+        m = jnp.clip(t - stage, 0, k - 1)      # this stage's micro-batch
+        inp0 = jax.lax.dynamic_index_in_dim(xs_full, m, 0, keepdims=False)
+        cur = jnp.where(stage == 0, inp0, state)
+        enc = None
+        if enc_full is not None:
+            enc = jax.lax.dynamic_index_in_dim(enc_full, m, 0,
+                                               keepdims=False)
+        y, aux = run_stage(cur, enc)
+        nxt = jax.lax.ppermute(y, spec.axis, perm)
+        live = (t >= stage) & (t < stage + k)
+        aux_acc = aux_acc + jnp.where(live, aux, 0.0)
+        return (nxt, aux_acc), y
+
+    (_, aux_acc), ys = jax.lax.scan(tick, (state0, aux0), jnp.arange(ticks))
+    # last stage's outputs live at ticks [S-1, S-1+k)
+    out = jax.lax.dynamic_slice_in_dim(ys, s_stages - 1, k, axis=0)
+    return out, aux_acc
+
+
+def _pipeline_partial_manual(cfg, staged, xs, positions, spec, mesh,
+                             prefix_len, enc_outs):
+    """Explicit-sharding JAX: Manual over 'pod' only, data/model auto."""
+    k = xs.shape[0]
+    # micro-batch over data; seq deliberately NOT model-sharded inside the
+    # stage: per-micro-batch SP re-gathers the stage weights and re-reduces
+    # weight grads k times (refuted, EXPERIMENTS.md §Perf pipeline it2) —
+    # without SP, GSPMD defers the weight-grad reduction across ticks.
+    data_sharding = compat.auto_axes_sharding(mesh, spec.axis, P("data"))
+
+    def pin(x):
+        """Anchor the micro-batch dim to the data axis INSIDE the manual-
+        over-pod region — without this GSPMD replicates the micro-batch
+        across the data axis (EXPERIMENTS.md §Perf, pipeline iteration 1)."""
+        return jax.lax.with_sharding_constraint(x, data_sharding)
+
+    stage_scan = _stage_scan_fn(cfg, spec, positions, prefix_len)
+
     def per_stage(blocks_stage, xs_full, enc_full):
         # manual over 'pod': blocks_stage leaves [1, L/S, ...]
         blocks_local = jax.tree.map(lambda a: a[0], blocks_stage)
         stage = jax.lax.axis_index(spec.axis)
         # carries differ per stage -> mark them varying over the pod axis
-        state = jax.lax.pcast(jnp.zeros(xs_full.shape[1:], xs_full.dtype),
-                              (spec.axis,), to="varying")
-        aux0 = jax.lax.pcast(jnp.float32(0.0), (spec.axis,), to="varying")
-        perm = [(i, i + 1) for i in range(s_stages - 1)]
-
-        def tick(carry, t):
-            state, aux_acc = carry
-            m = jnp.clip(t - stage, 0, k - 1)      # this stage's micro-batch
-            inp0 = jax.lax.dynamic_index_in_dim(xs_full, m, 0, keepdims=False)
-            cur = jnp.where(stage == 0, inp0, state)
-            enc = None
-            if enc_full is not None:
-                enc = jax.lax.dynamic_index_in_dim(enc_full, m, 0,
-                                                   keepdims=False)
-            y, aux = stage_scan(blocks_local, cur, enc)
-            nxt = jax.lax.ppermute(y, spec.axis, perm)
-            live = (t >= stage) & (t < stage + k)
-            aux_acc = aux_acc + jnp.where(live, aux, 0.0)
-            return (nxt, aux_acc), y
-
-        (_, aux_acc), ys = jax.lax.scan(
-            tick, (state, aux0), jnp.arange(ticks))
-        # last stage's outputs live at ticks [S-1, S-1+k)
-        out = jax.lax.dynamic_slice_in_dim(ys, s_stages - 1, k, axis=0)
+        state = compat.mark_varying(
+            jnp.zeros(xs_full.shape[1:], xs_full.dtype), (spec.axis,))
+        aux0 = compat.mark_varying(jnp.float32(0.0), (spec.axis,))
+        out, aux_acc = _tick_loop(
+            spec, stage, k, xs_full, enc_full, state, aux0,
+            lambda cur, enc: stage_scan(blocks_local, cur, enc, pin))
         # stack a stage axis so out_specs=P('pod') can concatenate
         return out[None], aux_acc[None]
 
-    fn = jax.shard_map(
-        per_stage, mesh=mesh,
-        in_specs=(P(spec.axis), P(), P()),
+    args = [staged, xs]
+    in_specs = [P(spec.axis), P()]
+    if enc_outs is not None:
+        args.append(enc_outs)
+        in_specs.append(P())
+    body = per_stage if enc_outs is not None \
+        else (lambda b, x: per_stage(b, x, None))
+    fn = compat.shard_map(
+        body, mesh,
+        in_specs=tuple(in_specs),
         out_specs=(P(spec.axis), P(spec.axis)),
-        axis_names={spec.axis}, check_vma=True)
-    outs, auxes = fn(staged, xs, enc_outs)
-    return outs[-1], auxes[-1]          # the last stage's real outputs
+        manual_axes={spec.axis}, check=True)
+    return fn(*args)
+
+
+def _pipeline_full_manual(cfg, staged, xs, positions, spec, mesh,
+                          prefix_len, enc_outs):
+    """Legacy JAX: fully-manual region (partial-manual aborts in the 0.4.x
+    SPMD partitioner).
+
+    The micro-batch dim is explicitly sharded over 'data' when divisible
+    (each data shard runs the same pipeline on its slice; weight grads are
+    psum'ed by the shard_map transpose); otherwise — and over the 'model'
+    axis always — compute inside stages is replicated.  The stage index
+    arrives as a pod-sharded ``arange`` input because ``axis_index``
+    lowers to an SPMD-unsupported partition-id on this generation.
+    """
+    k, mb = xs.shape[0], xs.shape[1]
+    other_axes = tuple(n for n in mesh.axis_names if n != spec.axis)
+    n_data = mesh.shape.get("data", 1)
+    data_axis = "data" if ("data" in mesh.shape and n_data > 1
+                           and mb % n_data == 0) else None
+    mb_spec = P(None, data_axis)   # [k, mb, ...] leaves
+
+    stage_scan = _stage_scan_fn(cfg, spec, positions, prefix_len)
+
+    def per_stage(stage_ids, blocks_stage, xs_full, pos, enc_full):
+        del pos  # replicated copy of ``positions`` (kept as an explicit
+        # argument: legacy shard_map cannot close over traced values)
+        blocks_local = jax.tree.map(lambda a: a[0], blocks_stage)
+        stage = stage_ids[0]
+        state = jnp.zeros(xs_full.shape[1:], xs_full.dtype)
+        aux0 = jnp.float32(0.0)
+        out, aux_acc = _tick_loop(
+            spec, stage, k, xs_full, enc_full, state, aux0,
+            lambda cur, enc: stage_scan(blocks_local, cur, enc, lambda y: y))
+        if other_axes:
+            # per-data-slice aux -> batch mean (replicated axes unchanged)
+            aux_acc = jax.lax.pmean(aux_acc, other_axes)
+        return out[None], aux_acc[None]
+
+    stage_ids = jnp.arange(spec.num_stages, dtype=jnp.int32)
+    args = [stage_ids, staged, xs, positions]
+    in_specs = [P(spec.axis), P(spec.axis), mb_spec, P()]
+    if enc_outs is not None:
+        args.append(enc_outs)
+        in_specs.append(mb_spec)
+    body = per_stage if enc_outs is not None \
+        else (lambda s, b, x, p: per_stage(s, b, x, p, None))
+    fn = compat.shard_map(
+        body, mesh,
+        in_specs=tuple(in_specs),
+        out_specs=(P(spec.axis, None, data_axis), P(spec.axis)),
+        check=False)
+    return fn(*args)
 
 
 def make_pipelined_loss(model, spec: PipelineSpec, mesh=None):
@@ -144,16 +272,25 @@ def make_pipelined_loss(model, spec: PipelineSpec, mesh=None):
 
     Requires a homogeneous (scan-stacked) architecture; the heterogeneous
     recurrentgemma pattern keeps the pod-as-DP path (DESIGN.md §7).
+
+    Batches whose size is not divisible by k are padded with zero-
+    embedding rows up to ``k * ceil(b / k)`` so ``pipeline_k_auto``-chosen
+    k never needs batch-divisibility; pad rows are sliced off before the
+    loss, so the xent is exactly the unpadded batch's for per-row
+    architectures.  Caveat: MoE layers see the pad tokens (they shift the
+    aux statistics and occupy shared capacity slots), one more facet of
+    the documented per-micro-batch router deviation (DESIGN.md §6).
     """
     cfg = model.cfg
     assert cfg.homogeneous, (
         "pipeline mode needs a homogeneous layer stack; "
         f"{cfg.name} has a mixed pattern — use pod-as-data-parallel")
     k = spec.microbatches
+    assert k >= 1, f"microbatches k={k} must be >= 1"
 
     def loss_fn(params, batch):
-        # Plain-JAX context inside: data/model axes are GSPMD-auto, the
-        # pipeline shard_map is manual over 'pod' only.
+        # Plain-JAX context inside: data/model axes are GSPMD-auto (or
+        # replicated on legacy JAX), the pipeline shard_map owns 'pod'.
         from repro.parallel.context import get_ctx
         use_mesh = mesh if mesh is not None else get_ctx().mesh
         with use_ctx(ParallelCtx()):
@@ -174,8 +311,15 @@ def make_pipelined_loss(model, spec: PipelineSpec, mesh=None):
                 enc_flat = model._encode(params, batch["frames"].astype(dt))
 
             b, seq = x.shape[0], x.shape[1]
-            assert b % k == 0, f"batch {b} not divisible by k={k}"
-            mb = b // k
+            pad_rows = (-b) % k
+            if pad_rows:
+                x = jnp.concatenate(
+                    [x, jnp.zeros((pad_rows,) + x.shape[1:], x.dtype)])
+                if enc_flat is not None:
+                    enc_flat = jnp.concatenate(
+                        [enc_flat, jnp.zeros((pad_rows,) + enc_flat.shape[1:],
+                                             enc_flat.dtype)])
+            mb = (b + pad_rows) // k
             xs = x.reshape(k, mb, seq, x.shape[-1])
             enc_outs = None
             if enc_flat is not None:
@@ -187,7 +331,7 @@ def make_pipelined_loss(model, spec: PipelineSpec, mesh=None):
                                        spec, mesh=use_mesh,
                                        prefix_len=prefix_len,
                                        enc_outs=enc_outs)
-            h = out.reshape(b, seq, x.shape[-1])
+            h = out.reshape(b + pad_rows, seq, x.shape[-1])[:b]
             h = apply_norm(h, params["final_norm"], cfg.norm)
             loss = model.xent(params, h, labels)
             total = loss + 0.01 * aux

@@ -21,7 +21,11 @@ import dataclasses
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# sharding types come from the compat choke point (parallel/compat.py):
+# the policy itself is spec math and works with concrete and abstract
+# meshes on every supported JAX.
+from repro.parallel.compat import Mesh, NamedSharding, PartitionSpec as P
 
 
 def _greedy_spec(shape, axis_sizes: dict, axis_order, prefer_trailing) -> P:

@@ -24,20 +24,22 @@ def make_lm_loss(model: LM):
 
 
 def make_lm_train_step(model: LM, opt: Optimizer, *, microbatches: int = 1,
-                       pipeline=None, compress: bool = False):
+                       pipeline=None, mesh=None, compress: bool = False):
     """Build ``train_step(state_tree, batch) -> (state_tree, metrics)``.
 
     ``microbatches`` is the paper's k — gradient accumulation over k
     micro-batches (mathematically equivalent update).  ``pipeline`` is an
     optional PipelineSpec that routes the block stack through the C2P2SL
-    2-stage pipeline over the pod axis instead.  ``compress`` applies
-    int8 block-quantized gradients with error feedback before the update —
-    the EPSL volume-reduction idea generalized to the DP axis (the state
-    tree then carries an ``error_fb`` entry; see training/compress.py).
+    S-stage pipeline over the pod axis instead (``mesh`` pins the pipeline
+    mesh; defaults to the ambient parallel context's).  ``compress``
+    applies int8 block-quantized gradients with error feedback before the
+    update — the EPSL volume-reduction idea generalized to the DP axis
+    (the state tree then carries an ``error_fb`` entry; see
+    training/compress.py).
     """
     if pipeline is not None:
         from repro.parallel.pipeline import make_pipelined_loss
-        loss_fn = make_pipelined_loss(model, pipeline)
+        loss_fn = make_pipelined_loss(model, pipeline, mesh=mesh)
         vg = jax.value_and_grad(loss_fn, has_aux=True)
     else:
         vg = microbatched_value_and_grad(make_lm_loss(model), microbatches)

@@ -43,8 +43,12 @@ def make_sl_step(spec: SplitSpec, opt: Optimizer):
         loss_last = jnp.float32(0.0)
         mets_last = None
         for i in range(len(xs)):
-            x = xs[i].reshape((-1,) + xs[i].shape[2:])
-            y = ys[i].reshape((-1,) + ys[i].shape[2:])
+            # shard_batch yields k (possibly ragged/empty) micro-batches
+            # per UE; sequential SL trains on the UE's whole allocation
+            x = jnp.concatenate(list(xs[i]), axis=0)
+            y = jnp.concatenate(list(ys[i]), axis=0)
+            if x.shape[0] == 0:
+                continue                 # zero-batch UE: no local update
 
             def loss_fn(both):
                 ue, bs = both

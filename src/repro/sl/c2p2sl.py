@@ -49,9 +49,10 @@ def make_c2p2sl_step(spec: SplitSpec, opt: Optimizer, k: int,
                      epsl_aggregate: bool = False):
     """Build one jitted C2P2SL batch step.
 
-    inputs per call: state tree + per-UE stacked micro-batches:
-      xs: [n_ue][k, b_i/k, ...] (list, sizes may differ per UE)
-      ys: [n_ue][k, b_i/k]
+    inputs per call: state tree + per-UE micro-batch sequences (the
+    ``shard_batch`` layout — possibly ragged, possibly empty):
+      xs: [n_ue][k][b_{i,m}, ...]
+      ys: [n_ue][k][b_{i,m}]
     ``epsl_aggregate=True`` switches on the EPSL baseline behaviour:
     activation gradients are mean-aggregated over the micro-batch dimension
     before the downlink (volume / n_samples), an approximation.
@@ -63,20 +64,28 @@ def make_c2p2sl_step(spec: SplitSpec, opt: Optimizer, k: int,
         bs_grad_acc = jax.tree.map(jnp.zeros_like, bs_params)
         loss_acc = jnp.float32(0.0)
         met_acc = None
-        sizes = np.array([x.shape[1] for x in xs], dtype=np.float64)
-        total = float(sizes.sum()) * k
+        # micro-batch sizes may be ragged (shard_batch distributes the
+        # remainder of b_i over k); weights come from actual sample counts
+        total = float(sum(int(xs[i][m].shape[0])
+                          for i in range(n_ue) for m in range(k)))
 
         for m in range(k):                       # micro-batch pipeline order
             # --- UE FP (all UEs, per paper in parallel) + vjp closures ---
+            # zero-sized micro-batches (b_i < k or zero-batch UEs) are
+            # skipped statically: they carry no samples and would feed
+            # empty batches through batch-statistics layers.
+            live = [i for i in range(n_ue) if xs[i][m].shape[0] > 0]
+            if not live:
+                continue
             acts, pullbacks = [], []
-            for i in range(n_ue):
+            for i in live:
                 a, vjp = jax.vjp(lambda p, x=xs[i][m]: spec.ue_fwd(p, x),
                                  ue_params)
                 acts.append(a)
                 pullbacks.append(vjp)
             # --- UT: aggregate at BS ---
             agg = jnp.concatenate(acts, axis=0)
-            labels = jnp.concatenate([ys[i][m] for i in range(n_ue)], axis=0)
+            labels = jnp.concatenate([ys[i][m] for i in live], axis=0)
             w_m = agg.shape[0] / total           # sample-weighted average
 
             # --- BS FP + BP (1F1B) ---
@@ -89,23 +98,25 @@ def make_c2p2sl_step(spec: SplitSpec, opt: Optimizer, k: int,
             bs_grad_acc = jax.tree.map(lambda g, d: g + d * w_m,
                                        bs_grad_acc, dbs)
             loss_acc = loss_acc + loss * w_m
-            met_acc = mets if met_acc is None else jax.tree.map(
-                jnp.add, met_acc, mets)
+            # metrics sample-weighted like the loss (a straight /k average
+            # over-weights small micro-batches under ragged splits)
+            mets_w = jax.tree.map(lambda v: v * w_m, mets)
+            met_acc = mets_w if met_acc is None else jax.tree.map(
+                jnp.add, met_acc, mets_w)
 
             # --- DT + UE BP ---
             offs = 0
-            for i in range(n_ue):
-                bi = acts[i].shape[0]
+            for j, i in enumerate(live):
+                bi = acts[j].shape[0]
                 da = dagg[offs:offs + bi]
                 offs += bi
                 if epsl_aggregate:
                     da = jnp.broadcast_to(da.mean(axis=0, keepdims=True),
                                           da.shape)
-                (dui,) = pullbacks[i](da)
+                (dui,) = pullbacks[j](da)
                 ue_grad_acc = jax.tree.map(lambda g, d: g + d * w_m,
                                            ue_grad_acc, dui)
 
-        met_acc = jax.tree.map(lambda v: v / k, met_acc)
         return loss_acc, ue_grad_acc, bs_grad_acc, met_acc
 
     def step(state_tree, xs, ys):
@@ -127,29 +138,41 @@ def make_c2p2sl_step(spec: SplitSpec, opt: Optimizer, k: int,
 
 
 def shard_batch(batch_x, batch_y, b: np.ndarray, k: int):
-    """Split a host batch into per-UE stacks of k micro-batches.
+    """Split a host batch into per-UE sequences of k micro-batches.
 
-    Per-UE sizes b_i are rounded to multiples of k (plan sizes come from the
-    AO optimizer which works on integers; we adjust the remainder onto the
-    largest UE).
+    Every sample of the host batch is used exactly once and the returned
+    lists have one entry per UE in ``b``'s order (zero-batch UEs get k
+    empty micro-batches), so UE indices stay aligned with ``Fleet``
+    ordering.  Per-UE sizes b_i need not be multiples of k: the remainder
+    ``b_i % k`` is spread one sample each over the first micro-batches
+    (ragged micro-batches), instead of being silently dropped.  If
+    ``sum(b) != len(batch_x)`` (AO rounding), the difference is absorbed
+    by the largest allocations, never driving any b_i below zero.
+
+    Returns ``(xs, ys)`` with ``xs[i]`` a list of k arrays shaped
+    ``[b_{i,m}, ...]`` where ``sum_m b_{i,m} == b_i``.
     """
+    assert k >= 1, f"micro-batch count k={k} must be >= 1"
     b = np.asarray(b, dtype=int).copy()
-    b -= b % k
-    deficit = batch_x.shape[0] - int(b.sum())
-    b[np.argmax(b)] += deficit - deficit % k
+    assert (b >= 0).all(), f"negative UE allocation in {b}"
+    n = batch_x.shape[0]
+    diff = n - int(b.sum())
+    while diff != 0:                       # absorb AO rounding slack onto
+        i = int(np.argmax(b))              # the largest allocation (keeps
+        step = diff if diff > 0 else max(-int(b[i]), diff)  # zero UEs zero)
+        b[i] += step
+        diff -= step
     xs, ys, off = [], [], 0
     for bi in b:
-        if bi <= 0:
-            xs.append(None)
-            ys.append(None)
-            continue
-        xi = batch_x[off:off + bi]
-        yi = batch_y[off:off + bi]
-        off += bi
-        xs.append(xi.reshape((k, bi // k) + xi.shape[1:]))
-        ys.append(yi.reshape((k, bi // k) + yi.shape[1:]))
-    xs = [x for x in xs if x is not None]
-    ys = [y for y in ys if y is not None]
+        base, rem = divmod(int(bi), k)
+        sizes = [base + 1] * rem + [base] * (k - rem)
+        xi, yi = [], []
+        for s in sizes:
+            xi.append(batch_x[off:off + s])
+            yi.append(batch_y[off:off + s])
+            off += s
+        xs.append(xi)
+        ys.append(yi)
     return xs, ys
 
 

@@ -1,0 +1,90 @@
+"""Deterministic offline stand-in for the ``hypothesis`` property-testing
+library.
+
+Installed into ``sys.modules`` by ``conftest.py`` ONLY when the real
+``hypothesis`` is unavailable, so the property-test modules (test_ao,
+test_compress, test_kernels, test_schedule, test_sharding, test_wireless)
+collect and run in hermetic environments.  It covers exactly the API
+surface those tests use:
+
+    from hypothesis import given, settings, strategies as st
+    st.integers / st.sampled_from / st.booleans / st.lists
+
+Semantics: ``@given`` turns the test into a zero-argument function that
+replays ``max_examples`` (from ``@settings``, default 10) examples drawn
+from a fixed-seed PRNG — deterministic across runs, no shrinking, no
+example database.  This trades hypothesis' adaptive search for
+reproducibility; with the real library installed the stub never loads.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+_SEED = 0xC2B25  # fixed: stub runs are reproducible by construction
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+def lists(elements, min_size: int = 0, max_size: int = 10):
+    return _Strategy(lambda rng: [
+        elements.example(rng)
+        for _ in range(rng.randint(min_size, max_size))])
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.sampled_from = sampled_from
+strategies.booleans = booleans
+strategies.lists = lists
+
+
+class settings:
+    """Decorator: records max_examples on the (given-wrapped) test."""
+
+    def __init__(self, deadline=None, max_examples: int = 10, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(**named_strategies):
+    """Replay-based ``@given``: deterministic example sweep.
+
+    The wrapper takes no parameters (the strategy-bound arguments must be
+    the test's only ones), so pytest does not mistake them for fixtures.
+    """
+    def deco(fn):
+        def run():
+            rng = random.Random(_SEED)
+            n = getattr(run, "_stub_max_examples", 10)
+            for _ in range(n):
+                fn(**{name: s.example(rng)
+                      for name, s in named_strategies.items()})
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        # settings may sit on either side of given (hypothesis allows
+        # both orders): inherit a mark already stamped on the raw fn
+        if hasattr(fn, "_stub_max_examples"):
+            run._stub_max_examples = fn._stub_max_examples
+        return run
+    return deco

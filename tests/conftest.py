@@ -3,3 +3,15 @@ import sys
 
 # Tests run single-device (the dry-run owns the 512-device XLA flag).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# Offline fallback: when hypothesis isn't installed, serve the deterministic
+# replay stub so the property-test modules still collect and run (see
+# tests/_hypothesis_stub.py for the exact semantics).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies

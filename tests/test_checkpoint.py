@@ -75,10 +75,11 @@ def test_restore_with_shardings_resharding(tmp_path):
     (single-device) sharding tree — the N->M mesh path exercised at the
     device counts this container has."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.parallel.compat import make_mesh
     tree = make_tree()
     ck.save(str(tmp_path), 1, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     shardings = jax.tree.map(
         lambda x: NamedSharding(mesh, P()), tree)
     restored = ck.restore(str(tmp_path), 1, tree, shardings)

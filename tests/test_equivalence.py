@@ -93,9 +93,16 @@ def test_epsl_differs():
 FAMILY_CONFIGS = {
     "dense": LMConfig(name="t-dense", num_layers=2, d_model=32, n_heads=4,
                       n_kv=2, d_ff=64, vocab=64, dtype="float32"),
+    # moe_capacity >= E/topk makes the dispatch provably drop-free
+    # (capacity = ceil(T*topk*f/E) >= T bounds every expert's load), so
+    # micro-batching is exactly equivalent; with the default 1.25 the
+    # capacity-dropped token SETS differ between k=1 and k=4 dispatch
+    # granularities and grads deviate by ~4e-2 (diagnosed: unbounded
+    # capacity agrees to 7e-9) — that documented deviation is a capacity
+    # property, not an accumulation one, and isn't what this test asserts.
     "moe": LMConfig(name="t-moe", num_layers=2, d_model=32, n_heads=4,
                     n_kv=2, d_ff=32, vocab=64, moe_experts=4, moe_topk=2,
-                    dtype="float32"),
+                    moe_capacity=2.0, dtype="float32"),
     "hybrid": LMConfig(name="t-hyb", num_layers=3, d_model=32, n_heads=4,
                        n_kv=1, d_ff=64, vocab=64, window=8,
                        pattern=("rglru", "rglru", "local"), lru_width=32,
@@ -128,13 +135,9 @@ def test_microbatch_grad_equivalence(family):
     vg4 = microbatched_value_and_grad(loss_fn, 4)
     (l1, _), g1 = jax.jit(vg1)(params, batch)
     (l4, _), g4 = jax.jit(vg4)(params, batch)
-    # MoE capacity buckets are sized per dispatch call, so token-drop sets
-    # can differ between k=1 and k=4 — a bounded, documented deviation
-    # (DESIGN.md §6); the other families are exact.
-    loss_tol = 5e-3 if family == "moe" else 1e-4
-    grad_tol = 3e-2 if family == "moe" else 1e-3
-    assert abs(float(l1) - float(l4)) < loss_tol
-    tree_close(g1, g4, tol=grad_tol)
+    # every family is exact here; moe runs drop-free (see FAMILY_CONFIGS)
+    assert abs(float(l1) - float(l4)) < 1e-4
+    tree_close(g1, g4, tol=1e-3)
 
 
 def test_sgd_and_adam_updates_shapes():

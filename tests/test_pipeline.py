@@ -32,6 +32,7 @@ def test_pipeline_matches_plain_model():
         import jax.numpy as jnp
         from repro.models import LM, LMConfig
         from repro.data import lm_batch_for
+        from repro.parallel.compat import make_mesh, mesh_context
         from repro.parallel.pipeline import PipelineSpec, make_pipelined_loss
 
         cfg = LMConfig(name='t', num_layers=4, d_model=64, n_heads=4, n_kv=2,
@@ -39,13 +40,12 @@ def test_pipeline_matches_plain_model():
         m = LM(cfg)
         p = m.init(jax.random.key(0))
         batch = lm_batch_for(cfg, 8, 32)
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         loss_ref, _ = m.forward(p, batch)
         g_ref = jax.grad(lambda p: m.forward(p, batch)[0])(p)
         spec = PipelineSpec(num_stages=2, microbatches=4)
         loss_fn = make_pipelined_loss(m, spec, mesh=mesh)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             loss_pipe, _ = jax.jit(loss_fn)(p, batch)
             g_pipe = jax.jit(jax.grad(lambda p: loss_fn(p, batch)[0]))(p)
         d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
@@ -67,6 +67,7 @@ def test_pipeline_four_stages():
         import jax.numpy as jnp
         from repro.models import LM, LMConfig
         from repro.data import lm_batch_for
+        from repro.parallel.compat import make_mesh, mesh_context
         from repro.parallel.pipeline import PipelineSpec, make_pipelined_loss
 
         cfg = LMConfig(name='t', num_layers=8, d_model=32, n_heads=4, n_kv=2,
@@ -74,12 +75,11 @@ def test_pipeline_four_stages():
         m = LM(cfg)
         p = m.init(jax.random.key(1))
         batch = lm_batch_for(cfg, 8, 16)
-        mesh = jax.make_mesh((4, 2, 1), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_mesh((4, 2, 1), ("pod", "data", "model"))
         loss_ref, _ = m.forward(p, batch)
         spec = PipelineSpec(num_stages=4, microbatches=8)
         loss_fn = make_pipelined_loss(m, spec, mesh=mesh)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             loss_pipe, _ = jax.jit(loss_fn)(p, batch)
         print(json.dumps({"ref": float(loss_ref), "pipe": float(loss_pipe)}))
     """, devices=8)
@@ -93,9 +93,9 @@ def test_data_parallel_grads_match_single_device():
     out = run_sub("""
         import jax, json
         import jax.numpy as jnp
-        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.models import LM, LMConfig
         from repro.data import lm_batch_for
+        from repro.parallel.compat import make_mesh
         from repro.parallel.context import ParallelCtx, use_ctx
         from repro.parallel.sharding import ShardingPolicy
 
@@ -105,8 +105,7 @@ def test_data_parallel_grads_match_single_device():
         p = m.init(jax.random.key(0))
         batch = lm_batch_for(cfg, 8, 16)
         loss1 = float(m.forward(p, batch)[0])
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         policy = ShardingPolicy(mesh)
         psh = policy.param_shardings(p)
         bsh = policy.batch_shardings(batch)
@@ -128,6 +127,7 @@ def test_moe_sharded_matches_local():
         import jax.numpy as jnp
         from repro.models import LM, LMConfig
         from repro.data import lm_batch_for
+        from repro.parallel.compat import make_mesh, mesh_context
         from repro.parallel.context import ParallelCtx, use_ctx
         from repro.parallel.sharding import ShardingPolicy
 
@@ -138,10 +138,9 @@ def test_moe_sharded_matches_local():
         p = m.init(jax.random.key(0))
         batch = lm_batch_for(cfg, 8, 16)
         loss1 = float(m.forward(p, batch)[0])
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         with use_ctx(ParallelCtx(mesh=mesh)):
-            with jax.set_mesh(mesh):
+            with mesh_context(mesh):
                 lossN = float(jax.jit(lambda p, b: m.forward(p, b)[0])(p, batch))
         print(json.dumps({"l1": loss1, "lN": lossN}))
     """)

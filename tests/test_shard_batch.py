@@ -1,0 +1,95 @@
+"""shard_batch invariants: every sample used once, one entry per UE,
+remainder redistribution (the b=[3,7], k=4 data-loss regression)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sl import shard_batch
+
+
+def flatten(xs):
+    """All samples of a per-UE micro-batch list, in emission order."""
+    return np.concatenate([m for ue in xs for m in ue], axis=0)
+
+
+def check_invariants(batch_x, batch_y, b, k):
+    xs, ys = shard_batch(batch_x, batch_y, np.asarray(b), k)
+    n = batch_x.shape[0]
+    # one entry per UE, k micro-batches each (position-aligned with Fleet)
+    assert len(xs) == len(ys) == len(b)
+    assert all(len(ue) == k for ue in xs + ys)
+    # every sample of the host batch appears exactly once, in order
+    np.testing.assert_array_equal(flatten(xs), batch_x)
+    np.testing.assert_array_equal(flatten(ys), batch_y)
+    # ragged sizes within a UE differ by at most 1 (balanced remainder)
+    for ue in xs:
+        sizes = [m.shape[0] for m in ue]
+        assert max(sizes) - min(sizes) <= 1
+        assert sorted(sizes, reverse=True) == sizes
+    assert sum(m.shape[0] for ue in xs for m in ue) == n
+    return xs, ys
+
+
+def _batch(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((n, 3)).astype(np.float32),
+            rng.integers(0, 10, size=(n,)))
+
+
+def test_remainder_not_dropped():
+    """The confirmed seed bug: b=[3,7], k=4 over 10 samples trained on 8."""
+    x, y = _batch(10)
+    check_invariants(x, y, [3, 7], 4)
+
+
+def test_zero_batch_ue_keeps_position():
+    x, y = _batch(8)
+    xs, ys = check_invariants(x, y, [0, 5, 3], 2)
+    assert all(m.shape[0] == 0 for m in xs[0])
+    assert [m.shape[0] for m in xs[1]] == [3, 2]
+    assert [m.shape[0] for m in xs[2]] == [2, 1]
+
+
+def test_bi_smaller_than_k():
+    x, y = _batch(2)
+    xs, _ = check_invariants(x, y, [2], 4)
+    assert [m.shape[0] for m in xs[0]] == [1, 1, 0, 0]
+
+
+def test_allocation_sum_mismatch_absorbed():
+    """AO integer rounding: sum(b) != n is absorbed by the LARGEST
+    allocation, nothing lost and zero-batch UEs stay empty."""
+    x, y = _batch(12)
+    xs, _ = check_invariants(x, y, [4, 4, 0], 3)    # deficit of 4
+    assert all(m.shape[0] == 0 for m in xs[2])
+    assert sum(m.shape[0] for m in xs[0]) == 8      # argmax took the slack
+    x, y = _batch(6)
+    xs, _ = check_invariants(x, y, [5, 5, 0], 2)    # surplus of 4
+    assert all(m.shape[0] == 0 for m in xs[2])
+
+
+def test_divisible_split_unchanged():
+    """The classic layout: b_i multiples of k stay rectangular."""
+    x, y = _batch(48)
+    xs, _ = check_invariants(x, y, [16, 16, 16], 4)
+    assert all(m.shape[0] == 4 for ue in xs for m in ue)
+
+
+@settings(deadline=None, max_examples=60)
+@given(n_ue=st.integers(1, 6), k=st.integers(1, 8),
+       seed=st.integers(0, 10_000))
+def test_property_random_b_k(n_ue, k, seed):
+    """Property: any integer split uses every sample, one entry per UE."""
+    rng = np.random.default_rng(seed)
+    b = rng.integers(0, 12, size=n_ue)
+    n = int(b.sum())
+    if n == 0:
+        return
+    x, y = _batch(n, seed)
+    check_invariants(x, y, b, k)
+
+
+def test_negative_allocation_rejected():
+    x, y = _batch(4)
+    with pytest.raises(AssertionError, match="negative"):
+        shard_batch(x, y, np.array([5, -1]), 2)

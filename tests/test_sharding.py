@@ -7,10 +7,11 @@ from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_arch, param_specs
+from repro.parallel.compat import abstract_mesh
 from repro.parallel.sharding import ShardingPolicy, bytes_per_device
 
 # an abstract 2x16x16 mesh — no devices needed for spec math
-MESH = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 SP = ShardingPolicy(MESH)
 SP_PIPE = ShardingPolicy(MESH, pod_is_pipeline=True)
 
@@ -81,8 +82,7 @@ def test_pipeline_policy_blocks_over_pod():
 
 def test_bytes_per_device():
     tree = {"w": jax.ShapeDtypeStruct((256, 512), jnp.float32)}
-    sp = ShardingPolicy(jax.sharding.AbstractMesh((16, 16),
-                                                  ("data", "model")))
+    sp = ShardingPolicy(abstract_mesh((16, 16), ("data", "model")))
     n = bytes_per_device(tree, sp)
     # greedy: model->512 (trailing), data->256: fully sharded 256-way
     assert n == 256 * 512 * 4 // 256
@@ -91,8 +91,7 @@ def test_bytes_per_device():
 def test_hbm_feasibility_check():
     from repro.parallel.sharding import hbm_feasible
     small = {"w": jax.ShapeDtypeStruct((1024, 1024), jnp.float32)}
-    sp = ShardingPolicy(jax.sharding.AbstractMesh((16, 16),
-                                                  ("data", "model")))
+    sp = ShardingPolicy(abstract_mesh((16, 16), ("data", "model")))
     assert hbm_feasible(small, sp)
 
 
@@ -104,8 +103,7 @@ def test_full_state_fits_hbm(arch):
     cfg = get_arch(arch).full
     p = param_specs(cfg)
     opt_s = jax.eval_shape(adamw(1e-4).init, p)
-    sp = ShardingPolicy(jax.sharding.AbstractMesh((16, 16),
-                                                  ("data", "model")))
+    sp = ShardingPolicy(abstract_mesh((16, 16), ("data", "model")))
     state = {"params": p, "opt_state": opt_s}
     per_dev = bytes_per_device(state, sp)
     assert per_dev < 8 * 1024**3, f"{arch}: {per_dev/2**30:.1f} GiB"
