@@ -3,9 +3,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.ao import algorithm1, lemma1_k
+from repro.core.ao import algorithm1
 from repro.core.costs import resnet18_profile
-from repro.wireless.channel import ChannelParams
 from repro.wireless.fleet import sample_fleet
 
 

@@ -46,7 +46,8 @@ def scheme_round_times(n_ue: int, seed: int, *,
 
     res = algorithm1(prof, fleet, batch=batch)
     t_opt = task_times(prof, fleet, res.plan)
-    ms_c2p2, _ = simulate_c2p2sl(t_opt, res.plan.k)
+    ms_c2p2, _ = simulate_c2p2sl(t_opt, res.plan.k,
+                                 virtual_stages=res.plan.v)
 
     return {
         "SL": simulate_sl(prof, fleet, Plan(l=best_l, k=1, b=b_uni,

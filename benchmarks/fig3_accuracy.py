@@ -10,7 +10,6 @@ the event-driven schedule simulator.  Claims validated:
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import scheme_round_times

@@ -5,7 +5,6 @@ gains in poorer channels.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import averaged
 

@@ -13,13 +13,14 @@ import json
 import os
 
 
-def run_cell(arch, shape, multi=False, *, pipeline_k=0, cast_gathers=False,
-             seq_shard=None, microbatches=1, master_fp32=False,
-             pure_dp=False, tpu_model=False, top_n=10):
+def run_cell(arch, shape, multi=False, *, pipeline_k=0, pipeline_v=1,
+             cast_gathers=False, seq_shard=None, microbatches=1,
+             master_fp32=False, pure_dp=False, tpu_model=False, top_n=10):
     from repro.launch.dryrun import lower_cell
     from repro.analysis.hlo_costs import analyze
     from repro.analysis.roofline import RooflineTerms
     rec, comp = lower_cell(arch, shape, multi, pipeline_k=pipeline_k,
+                           pipeline_v=pipeline_v,
                            cast_gathers=cast_gathers, seq_shard=seq_shard,
                            microbatches=microbatches, master_fp32=master_fp32,
                            pure_dp=pure_dp)
@@ -63,6 +64,8 @@ def main():
     ap.add_argument("--shape", required=True)
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--pipeline-k", type=int, default=0)
+    ap.add_argument("--pipeline-v", type=int, default=1,
+                    help="interleaved virtual stages per pipeline stage")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--cast-gathers", action="store_true")
     ap.add_argument("--master-fp32", action="store_true",
@@ -86,6 +89,7 @@ def main():
         seq = True
     rec, prof = run_cell(args.arch, args.shape, args.mesh == "multi",
                          pipeline_k=args.pipeline_k,
+                         pipeline_v=args.pipeline_v,
                          cast_gathers=args.cast_gathers, seq_shard=seq,
                          microbatches=args.microbatches,
                          master_fp32=args.master_fp32,
@@ -95,6 +99,7 @@ def main():
     rec["label"] = args.label
     rec["knobs"] = {"cast_gathers": args.cast_gathers, "seq_shard": seq,
                     "pipeline_k": args.pipeline_k,
+                    "pipeline_v": args.pipeline_v,
                     "microbatches": args.microbatches,
                     "master_fp32": args.master_fp32,
                     "pure_dp": args.pure_dp,

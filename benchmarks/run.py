@@ -2,39 +2,58 @@
 
 Prints ``name,seconds,derived`` CSV rows.  ``--full`` uses the paper-scale
 seeds/steps; the default quick mode keeps the whole suite CPU-friendly.
+``--only a,b`` restricts to a subset (the CI smoke job runs the two
+schedule-level benches) and ``--json-out`` writes the timing rows as JSON
+so the ``BENCH_*.json`` trajectory can accumulate across CI runs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import time
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to run "
+                         "(default: all)")
+    ap.add_argument("--json-out", default=None,
+                    help="write timing rows to this JSON file")
     args = ap.parse_args(argv)
     quick = not args.full
 
     from benchmarks import (ao_convergence, fig3_accuracy, fig4_ue_scaling,
                             fig5_bandwidth, roofline_report)
 
-    rows = []
+    benches = {
+        "fig4_ue_scaling": fig4_ue_scaling.main,
+        "fig5_bandwidth": fig5_bandwidth.main,
+        "ao_convergence": ao_convergence.main,
+        "fig3_accuracy": fig3_accuracy.main,
+        "roofline_report": roofline_report.main,
+    }
+    selected = list(benches)
+    if args.only:
+        selected = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = [s for s in selected if s not in benches]
+        if unknown:
+            raise SystemExit(f"unknown benches {unknown}; "
+                             f"available: {sorted(benches)}")
 
-    def bench(name, fn):
+    rows = []
+    for name in selected:
         t0 = time.perf_counter()
         print(f"=== {name} ===", flush=True)
-        out = fn(quick=quick)
+        out = benches[name](quick=quick)
         dt = time.perf_counter() - t0
         rows.append((name, dt, out))
         print()
 
-    bench("fig4_ue_scaling", fig4_ue_scaling.main)
-    bench("fig5_bandwidth", fig5_bandwidth.main)
-    bench("ao_convergence", ao_convergence.main)
-    bench("fig3_accuracy", fig3_accuracy.main)
-    bench("roofline_report", roofline_report.main)
-
     print("name,seconds,derived")
+    json_rows = []
     for name, dt, out in rows:
         derived = ""
         if isinstance(out, dict):
@@ -46,6 +65,26 @@ def main(argv=None):
                         else f"{k}={v}"
                     break
         print(f"{name},{dt:.1f},{derived}")
+        json_rows.append({"name": name, "seconds": round(dt, 3),
+                          "derived": derived,
+                          "result": out if isinstance(out, dict) else None})
+
+    if args.json_out:
+        doc = {"mode": "full" if args.full else "quick",
+               "python": platform.python_version(),
+               "rows": json_rows}
+        try:
+            import jax
+            doc["jax"] = jax.__version__
+        except Exception:
+            pass
+        with open(args.json_out, "w") as f:
+            # benches return numpy scalars/arrays in places; .tolist()
+            # covers both without a per-bench schema
+            json.dump(doc, f, indent=1,
+                      default=lambda o: o.tolist()
+                      if hasattr(o, "tolist") else str(o))
+        print(f"wrote {args.json_out}")
 
 
 if __name__ == "__main__":

@@ -20,7 +20,6 @@ transformer by ~L.  This module re-derives the three roofline inputs from
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 
 _DTYPE_BYTES = {

@@ -17,8 +17,6 @@ from __future__ import annotations
 import dataclasses
 import re
 
-import numpy as np
-
 # TPU v5e hardware constants (per chip).
 HW = {
     "peak_flops_bf16": 197e12,      # FLOP/s

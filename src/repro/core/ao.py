@@ -46,7 +46,8 @@ def _coeffs(profile: LayerProfile, fleet: Fleet, l: int, k: int,
 
 
 def lemma1_k(profile: LayerProfile, fleet: Fleet, l: int, b: np.ndarray,
-             tau: np.ndarray, k_cap: int | None = None) -> int:
+             tau: np.ndarray, k_cap: int | None = None,
+             virtual_stages: int = 1) -> int:
     """Optimal micro-batch count for fixed (l, b, tau) — Lemma 1.
 
     The lemma's eta is, written with per-batch (k-independent) times,
@@ -55,7 +56,15 @@ def lemma1_k(profile: LayerProfile, fleet: Fleet, l: int, b: np.ndarray,
     communication/computation) drives k up; eta >= 1 (compute-bound BS) makes
     C4 non-binding so k is capped only by the micro-batch granularity
     (b_i/k >= 1) / the external cap.
+
+    ``virtual_stages = v > 1`` (interleaved chunks, see schedule.py): eta
+    is v-free (chunk work and chunk comm both scale 1/v) but the pipeline
+    already runs at slice granularity k*v, so the k needed to reach the
+    steady state divides by v: k* = ceil(floor(1/(1-eta)) / v).  The
+    sample-granularity cap min_i b_i does NOT divide — v slices the model
+    depth, not the batch.
     """
+    v = max(1, int(virtual_stages))
     t1 = task_times(profile, fleet, Plan(l=l, k=1, b=b, tau=tau))
     active = b > 0
     comm = (t1.uplink + t1.downlink)[active]
@@ -69,11 +78,12 @@ def lemma1_k(profile: LayerProfile, fleet: Fleet, l: int, b: np.ndarray,
     eta = W / float(np.min(comm))
     if eta >= 1.0:
         return cap
-    k = int(np.floor(1.0 / (1.0 - eta)))
+    k = -(-int(np.floor(1.0 / (1.0 - eta))) // v)
     return int(np.clip(k, 1, cap))
 
 
-def pipeline_k_auto(stage_compute_s: float, link_s: float, k_cap: int) -> int:
+def pipeline_k_auto(stage_compute_s: float, link_s: float, k_cap: int,
+                    virtual_stages: int = 1) -> int:
     """Lemma 1 transplanted to TPU pods (DESIGN.md §3-4).
 
     ``stage_compute_s`` plays t_b^F + t_b^B (per-stage compute per batch),
@@ -83,19 +93,22 @@ def pipeline_k_auto(stage_compute_s: float, link_s: float, k_cap: int) -> int:
     eta = W / comm is k-free, exactly as in the wireless derivation.
     ``k_cap`` is the TPU granularity bound: global_batch / data-axis size
     (a micro-batch must still shard over the data axis — EXPERIMENTS.md
-    §Perf, pipeline iteration 3).
+    §Perf, pipeline iteration 3).  ``virtual_stages = v > 1`` divides the
+    steady-state k by v (the pipeline streams k*v interleaved slices) but
+    never relaxes ``k_cap`` — v slices layers, not samples.
     """
+    v = max(1, int(virtual_stages))
     if link_s <= 0.0:
         return max(1, k_cap)
     eta = stage_compute_s / link_s
     if eta >= 1.0:
         return max(1, k_cap)
-    k = int(np.floor(1.0 / (1.0 - eta)))
+    k = -(-int(np.floor(1.0 / (1.0 - eta))) // v)
     return int(np.clip(k, 1, max(k_cap, 1)))
 
 
 def makespan_k(profile: LayerProfile, fleet: Fleet, l: int, b: np.ndarray,
-               tau: np.ndarray, k_cap: int = 64):
+               tau: np.ndarray, k_cap: int = 64, virtual_stages: int = 1):
     """Pick k by direct makespan minimization (robust fallback).
 
     Lemma 1 presumes the steady-state constraint C3 is satisfiable (BS compute
@@ -103,7 +116,8 @@ def makespan_k(profile: LayerProfile, fleet: Fleet, l: int, b: np.ndarray,
     settings no k satisfies C3 and the lemma collapses to k=1, yet larger k
     still shrinks the makespan by overlapping the comm pipe with BS compute —
     exactly the paper's Fig 5 low-bandwidth regime.  We simply evaluate the
-    event simulator over a small candidate set.
+    event simulator over a small candidate set (at ``virtual_stages``
+    interleave when v > 1).
     """
     from repro.core.schedule import simulate_c2p2sl
     active = b > 0
@@ -113,7 +127,7 @@ def makespan_k(profile: LayerProfile, fleet: Fleet, l: int, b: np.ndarray,
     best_k, best_ms = 1, np.inf
     for k in cands:
         t = task_times(profile, fleet, Plan(l=l, k=k, b=b, tau=tau))
-        ms, _ = simulate_c2p2sl(t, k)
+        ms, _ = simulate_c2p2sl(t, k, virtual_stages=virtual_stages)
         if ms < best_ms - 1e-12:
             best_k, best_ms = k, ms
     return best_k, best_ms
@@ -291,7 +305,8 @@ def solve_tau_p5(profile: LayerProfile, fleet: Fleet, l: int, k: int,
 def algorithm1(profile: LayerProfile, fleet: Fleet, batch: int,
                eps: float = 1e-4, max_iters: int = 20,
                k_cap: int | None = 64,
-               k_policy: str = "auto") -> AOResult:
+               k_policy: str = "auto",
+               v_cap: int = 1) -> AOResult:
     """Split-and-allocation AO (paper Algorithm 1).
 
     ``k_policy``:
@@ -299,54 +314,67 @@ def algorithm1(profile: LayerProfile, fleet: Fleet, batch: int,
       * ``"makespan"`` — argmin of the event simulator over k (robust);
       * ``"auto"``     — Lemma 1 when the steady-state regime is feasible
                          (eta < 1 gives k >= 2), makespan otherwise.
+
+    ``v_cap`` > 1 extends subproblem 1 to the joint (l, k, v) trade:
+    interleaved virtual-stage counts v in [1, v_cap] are enumerated
+    alongside the cut layer, each with its own Lemma-1/makespan k, and
+    the (l, k, v) triple minimizing the simulated makespan wins (the
+    AC2P2SL-style adaptive-schedule direction; v_cap=1 is the paper's
+    plain 1F1B).
     """
     n = fleet.n
     kc = k_cap or 64
+    vc = max(1, int(v_cap))
     # Initialize: batch proportional to UE compute, uniform slots.
     w = fleet.ue_flops / fleet.ue_flops.sum()
     b = np.floor(w * batch)
     b[np.argmax(w)] += batch - b.sum()
     tau = np.full(n, fleet.channel.frame_s / n)
 
-    def pick_k(cand_l, bb, tt):
-        k_lemma = lemma1_k(profile, fleet, cand_l, bb, tt, k_cap=kc)
+    def pick_k(cand_l, bb, tt, vv):
+        k_lemma = lemma1_k(profile, fleet, cand_l, bb, tt, k_cap=kc,
+                           virtual_stages=vv)
         if k_policy == "lemma1":
             return k_lemma
         if k_policy == "auto" and k_lemma > 1:
             return k_lemma
-        k_ms, _ = makespan_k(profile, fleet, cand_l, bb, tt, k_cap=kc)
+        k_ms, _ = makespan_k(profile, fleet, cand_l, bb, tt, k_cap=kc,
+                             virtual_stages=vv)
         return k_ms
 
-    l, k = 1, 1
+    l, k, v = 1, 1, 1
     history = []
     prev_br = np.inf
     for _ in range(max_iters):
-        # --- subproblem 1: (l, k) — enumerate cuts, k per policy ---
-        best = (np.inf, np.inf, l, k)
+        # --- subproblem 1: (l, k, v) — enumerate cuts x interleave ---
+        best = (np.inf, np.inf, l, k, v)
         for cand_l in feasible_l(profile, fleet, b):
-            cand_k = pick_k(cand_l, b, tau)
-            t = task_times(profile, fleet, Plan(l=cand_l, k=cand_k, b=b, tau=tau))
-            ms, _ = simulate_c2p2sl(t, cand_k)
-            br = bubble_rate(t, cand_k)
-            if ms < best[0] - 1e-12:
-                best = (ms, br, cand_l, cand_k)
-        _, _, l, k = best
+            for cand_v in range(1, vc + 1):
+                cand_k = pick_k(cand_l, b, tau, cand_v)
+                t = task_times(profile, fleet,
+                               Plan(l=cand_l, k=cand_k, b=b, tau=tau))
+                ms, _ = simulate_c2p2sl(t, cand_k, virtual_stages=cand_v)
+                br = bubble_rate(t, cand_k, cand_v)
+                if ms < best[0] - 1e-12:
+                    best = (ms, br, cand_l, cand_k, cand_v)
+        _, _, l, k, v = best
         # --- subproblem 2: b ---
         nb = solve_batch_p3(profile, fleet, l, k, tau, batch)
         if nb is not None:
             b = nb
         # --- subproblem 3: tau ---
         tau = solve_tau_p5(profile, fleet, l, k, b)
-        # re-pick k after b/tau moved
-        k = pick_k(l, b, tau)
+        # re-pick k after b/tau moved (v held from subproblem 1)
+        k = pick_k(l, b, tau, v)
 
         t = task_times(profile, fleet, Plan(l=l, k=k, b=b, tau=tau))
-        br = bubble_rate(t, k)
+        br = bubble_rate(t, k, v)
         history.append(br)
         if abs(prev_br - br) <= eps:
             break
         prev_br = br
 
-    plan = Plan(l=l, k=k, b=b, tau=tau)
+    plan = Plan(l=l, k=k, b=b, tau=tau, v=v)
     t = task_times(profile, fleet, plan)
-    return AOResult(plan=plan, bubble=bubble_rate(t, k), history=history, times=t)
+    return AOResult(plan=plan, bubble=bubble_rate(t, k, v),
+                    history=history, times=t)

@@ -20,12 +20,19 @@ from repro.wireless.fleet import Fleet
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """A full C2P2SL decision: cut layer, micro-batches, batch + slot split."""
+    """A full C2P2SL decision: cut layer, micro-batches, batch + slot split.
+
+    ``v`` is the interleaved virtual-stage count (1 = the paper's plain
+    1F1B): each side's model is sliced into v chunks whose tasks run at
+    1/v the duration, shrinking the pipeline warm-up/drain (the bubble)
+    by a factor of v at the same k (see parallel/pipeline.py).
+    """
 
     l: int                 # cut layer (1-based, cut AFTER layer l)
     k: int                 # number of micro-batches
     b: np.ndarray          # per-UE batch sizes, sum == global batch
     tau: np.ndarray        # per-UE TDMA slot lengths, sum <= frame T
+    v: int = 1             # interleaved virtual stages per side
 
     @property
     def batch(self) -> int:
@@ -76,9 +83,22 @@ def task_times(profile: LayerProfile, fleet: Fleet, plan: Plan) -> TaskTimes:
                      bs_bwd=float(bs_bwd), downlink=downlink, ue_bwd=ue_bwd)
 
 
-def bubble_rate(t: TaskTimes, k: int) -> float:
-    """BR = t_idle / (t_idle + t_work), eqs (16)-(18)."""
-    t_idle = float(np.max(t.ue_fwd + t.uplink) + np.max(t.downlink + t.ue_bwd))
+def bubble_rate(t: TaskTimes, k: int, virtual_stages: int = 1) -> float:
+    """BR = t_idle / (t_idle + t_work), eqs (16)-(18), generalized to
+    interleaved virtual stages.
+
+    With v > 1 every per-micro-batch task is sliced into v sub-chunk
+    tasks of 1/v the duration, so the warm-up/drain critical path — the
+    idle term ``max_i(t_i^F + t_i^U) + max_i(t_i^D + t_i^B)`` — shrinks
+    by a factor of v while the steady-state work ``k * (t_b^F + t_b^B)``
+    is unchanged: the ``(S-1)``-per-direction bubble of plain 1F1B
+    becomes ``(S-1)/v``.  Strictly decreasing in v whenever t_idle > 0.
+    """
+    v = int(virtual_stages)
+    if v < 1:
+        raise ValueError(f"virtual_stages={virtual_stages} must be >= 1")
+    t_idle = float(np.max(t.ue_fwd + t.uplink)
+                   + np.max(t.downlink + t.ue_bwd)) / v
     t_work = k * t.bs_work
     return t_idle / (t_idle + t_work)
 
@@ -96,8 +116,20 @@ def steady_state_ok(t: TaskTimes, k: int) -> bool:
 # timeline is a list of (actor, task, mb_index, start, end) for plotting.
 # ---------------------------------------------------------------------------
 
-def simulate_c2p2sl(t: TaskTimes, k: int, collect_timeline: bool = False):
+def simulate_c2p2sl(t: TaskTimes, k: int, collect_timeline: bool = False,
+                    virtual_stages: int = 1):
     """Makespan of one batch under the C2P2SL workflow (paper Fig 2).
+
+    ``virtual_stages = v > 1`` models interleaved scheduling: each side's
+    model is sliced into v chunks, so every per-micro-batch task becomes
+    v sub-tasks of 1/v the duration streaming through the same event
+    logic — i.e. the makespan of k*v work items of duration t/v.  Total
+    work is unchanged; the warm-up/drain shrinks ~v-fold.  Unlike simply
+    raising k (bounded by the per-UE sample granularity b_i/k >= 1), v
+    subdivides the model depth, so it remains available when k is capped.
+    Per-message overheads of the extra chunk boundaries are not modeled
+    (same idealization as eqs (7)-(12)).  Timeline entries then carry
+    slice indices m in [0, k*v).
 
     Semantics implemented exactly as SII-C:
       * each UE is a single processor running FP(0..k-1) then BP in arrival
@@ -108,6 +140,14 @@ def simulate_c2p2sl(t: TaskTimes, k: int, collect_timeline: bool = False):
         after ALL micro-batches' UT completed (the paper's ordering rule);
       * UE BP(m) needs DT(m) and the UE's previous task to be done.
     """
+    v = int(virtual_stages)
+    if v < 1:
+        raise ValueError(f"virtual_stages={virtual_stages} must be >= 1")
+    if v > 1:
+        t = TaskTimes(ue_fwd=t.ue_fwd / v, uplink=t.uplink / v,
+                      bs_fwd=t.bs_fwd / v, bs_bwd=t.bs_bwd / v,
+                      downlink=t.downlink / v, ue_bwd=t.ue_bwd / v)
+        k = k * v
     n = len(t.ue_fwd)
     tl = [] if collect_timeline else None
 

@@ -41,14 +41,19 @@ from repro.parallel.sharding import ShardingPolicy, bytes_per_device
 from repro.parallel.steps import (make_decode_step, make_lm_train_step,
                                   make_prefill_step)
 from repro.training.optim import adamw
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
-               *, pipeline_k: int = 0, microbatches: int = 1,
+               *, pipeline_k: int = 0, pipeline_v: int = 1,
+               microbatches: int = 1,
                cast_gathers: bool = False, seq_shard: bool | None = None,
                master_fp32: bool = False, pure_dp: bool = False):
     """Lower + compile one cell; returns (record, compiled)."""
+    if pipeline_v > 1 and not pipeline_k:
+        raise ValueError(
+            "pipeline_v > 1 requires pipeline_k (interleaving subdivides "
+            "pipeline stages; without the pipeline the record would claim "
+            "an interleave that never ran)")
     arch = get_arch(arch_name)
     shape = SHAPES[shape_name]
     cfg = arch.full
@@ -96,7 +101,8 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
                 from repro.parallel.pipeline import PipelineSpec
                 assert multi_pod, "the C2P2SL pipeline runs over the pod axis"
                 pipeline = PipelineSpec(num_stages=mesh.shape["pod"],
-                                        microbatches=pipeline_k)
+                                        microbatches=pipeline_k,
+                                        virtual_stages=pipeline_v)
             step = make_lm_train_step(model, opt, microbatches=microbatches,
                                       pipeline=pipeline)
             jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
@@ -148,6 +154,7 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
         "chips": chips,
         "kind": shape.kind,
         "pipeline_k": pipeline_k,
+        "pipeline_v": pipeline_v,
         "microbatches": microbatches,
         "compile_s": round(time.time() - t0, 1),
         "state_bytes_per_device": state_bytes,
@@ -177,6 +184,8 @@ def main():
     ap.add_argument("--pipeline-k", type=int, default=0,
                     help="enable the C2P2SL pod pipeline with k microbatches "
                          "(multi-pod train only)")
+    ap.add_argument("--pipeline-v", type=int, default=1,
+                    help="interleaved virtual stages per pipeline stage")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--out", default="results/dryrun.jsonl")
     ap.add_argument("--skip-done", action="store_true",
@@ -225,6 +234,7 @@ def main():
                     rec, compiled = lower_cell(
                         arch_name, shape_name, multi,
                         pipeline_k=args.pipeline_k,
+                        pipeline_v=args.pipeline_v,
                         microbatches=args.microbatches)
                     mem = rec["memory"]
                     rl = rec["roofline"]

@@ -25,8 +25,6 @@ import numpy as np
 from repro.configs import get_arch
 from repro.data import TokenTaskConfig, token_batches
 from repro.models.lm import LM
-from repro.parallel.context import ParallelCtx, use_ctx
-from repro.parallel.sharding import ShardingPolicy
 from repro.parallel.steps import make_lm_train_step
 from repro.training import checkpoint as ckpt_lib
 from repro.training.optim import adamw, cosine_schedule
@@ -69,6 +67,11 @@ def main(argv=None):
                          "over a pod axis of S local devices")
     ap.add_argument("--pipeline-k", type=int, default=4,
                     help="micro-batches per pipelined batch")
+    ap.add_argument("--virtual-stages", type=int, default=1,
+                    help="v>1: interleaved virtual stages — each pipeline "
+                         "stage holds v round-robin model chunks, "
+                         "shrinking the bubble to (S-1)/v ticks per "
+                         "direction at the same k")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=20)
@@ -104,7 +107,11 @@ def main(argv=None):
         from repro.parallel.pipeline import PipelineSpec
         mesh = make_host_mesh(pod=args.pipeline_stages)
         pipeline = PipelineSpec(num_stages=args.pipeline_stages,
-                                microbatches=args.pipeline_k)
+                                microbatches=args.pipeline_k,
+                                virtual_stages=args.virtual_stages)
+    elif args.virtual_stages > 1:
+        raise SystemExit("--virtual-stages requires --pipeline-stages > 1 "
+                         "(interleaving subdivides pipeline stages)")
     step_fn = jax.jit(make_lm_train_step(model, opt,
                                          microbatches=args.microbatches,
                                          pipeline=pipeline, mesh=mesh))

@@ -13,12 +13,10 @@ at 4k sequence length.
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.blocks import (apply_block, apply_block_decode,
                                  apply_block_prefill, init_block,
@@ -26,7 +24,6 @@ from repro.models.blocks import (apply_block, apply_block_decode,
 from repro.models.common import apply_norm, init_norm
 from repro.models.config import LMConfig
 from repro.parallel.context import constrain, get_ctx
-from jax.sharding import PartitionSpec as P
 
 
 def _sin_pos(seq: int, d: int, offset=0):

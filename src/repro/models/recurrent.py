@@ -10,7 +10,6 @@ module is the reference / CPU path).
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

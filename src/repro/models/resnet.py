@@ -13,7 +13,6 @@ submodels for any cut layer l in {1..5}.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -14,11 +14,30 @@ that stream through the stages.  The mapping:
     gradient accumulation over k micro-batches -> the scan's grad sum
 
 Implementation: a ``shard_map`` over the ``spec.axis`` ('pod') with a
-``lax.scan`` over ``k + S - 1`` pipeline ticks.  At tick t, stage s
-processes micro-batch ``t - s``; outputs move to stage ``s+1`` via
+``lax.scan`` over the pipeline ticks.  With ``virtual_stages == 1`` this
+is the plain 1F1B schedule: ``k + S - 1`` ticks, stage s processes
+micro-batch ``t - s`` at tick t; outputs move to stage ``s+1`` via
 ``ppermute`` — XLA's latency-hiding scheduler overlaps the transfer with
 the next tick's compute, which is exactly the paper's
 communication/computation overlap.
+
+Interleaved (virtual-stage) scheduling generalizes this: with
+``virtual_stages = v`` the layer stack splits into ``S*v`` chunks and
+chunk c lives on physical stage ``c % S`` (round-robin), so each stage
+owns v non-contiguous model chunks of ``L/(S*v)`` layers.  Micro-batch m
+enters the pipeline at tick ``sigma(m) = (m // S)*S*v + (m % S)`` and
+chunk c of micro-batch m runs at tick ``sigma(m) + c`` — the standard
+interleaved spacing, provably collision-free on every stage (two chunks
+of one stage differ by a multiple of S; two start offsets never do
+unless they differ by >= S*v).  A tick now costs 1/v of a stage pass, so
+the warm-up/drain bubble shrinks from ``(S-1)`` stage-passes to
+``(S-1)/v`` per direction at the same k, at the price of v-1 extra
+cut-activation hops per micro-batch (the chunk boundary wraps from stage
+S-1 back to stage 0, hence the cyclic ppermute when v > 1).  The reverse
+(backward) interleaved pipeline still falls out of ``jax.grad`` through
+the scan — the transpose of a cyclic ppermute is the reverse cyclic
+ppermute, and the transpose of the per-tick chunk gather is the
+scatter-add into the right chunk's weight gradient.
 
 Version portability (all probing in ``parallel/compat.py``):
 
@@ -54,29 +73,57 @@ from repro.parallel.context import ParallelCtx, use_ctx
 class PipelineSpec:
     num_stages: int = 2          # S: UE-side / BS-side (extensible)
     microbatches: int = 4        # k — pick with repro.core.ao.lemma1_k
+    virtual_stages: int = 1      # v: interleaved model chunks per stage
     axis: str = "pod"
 
     @classmethod
     def auto_k(cls, stage_compute_s: float, link_s: float, *,
-               num_stages: int = 2, k_cap: int = 16, axis: str = "pod"):
+               num_stages: int = 2, virtual_stages: int = 1,
+               k_cap: int = 16, axis: str = "pod"):
         """Spec with k chosen by the paper's Lemma 1 closed form
         (repro.core.ao.pipeline_k_auto) from per-stage compute time and
-        inter-stage link time."""
+        inter-stage link time; interleaving (v > 1) divides the k needed
+        to reach the steady state."""
         from repro.core.ao import pipeline_k_auto
-        k = pipeline_k_auto(stage_compute_s, link_s, k_cap=k_cap)
-        return cls(num_stages=num_stages, microbatches=k, axis=axis)
+        k = pipeline_k_auto(stage_compute_s, link_s, k_cap=k_cap,
+                            virtual_stages=virtual_stages)
+        return cls(num_stages=num_stages, microbatches=k,
+                   virtual_stages=virtual_stages, axis=axis)
 
 
-def _split_stages(blocks, num_stages: int):
-    """[L, ...] stacked block params -> [S, L/S, ...]."""
+def _split_stages(blocks, num_stages: int, virtual_stages: int = 1):
+    """[L, ...] stacked block params -> [S, v, L/(S*v), ...].
+
+    Chunk ``c = j*S + s`` (layers ``[c*Lc, (c+1)*Lc)``) lands at
+    ``out[s, j]`` — the round-robin placement of interleaved scheduling;
+    ``v == 1`` degenerates to the contiguous S-way split.
+    """
+    chunks = num_stages * virtual_stages
+
     def r(a):
         l = a.shape[0]
-        if l % num_stages != 0:
+        if l % chunks != 0:
             raise ValueError(
-                f"num_layers {l} not divisible by {num_stages} pipeline "
-                "stages — pick S dividing the layer count")
-        return a.reshape((num_stages, l // num_stages) + a.shape[1:])
+                f"num_layers {l} not divisible by num_stages x "
+                f"virtual_stages = {num_stages} x {virtual_stages} = "
+                f"{chunks} model chunks — pick S*v dividing the layer "
+                "count")
+        a = a.reshape((virtual_stages, num_stages, l // chunks)
+                      + a.shape[1:])
+        return jnp.swapaxes(a, 0, 1)
     return jax.tree.map(r, blocks)
+
+
+def _sigma(m: int, num_stages: int, virtual_stages: int) -> int:
+    """Pipeline-entry tick of micro-batch m (interleaved spacing).
+
+    Consecutive micro-batches within a group of S enter back-to-back;
+    groups are spaced S*v ticks apart so that no two chunks of one stage
+    ever need the same tick (their chunk offsets differ by a multiple of
+    S but less than S*v).  For v == 1 this is simply ``sigma(m) = m``.
+    """
+    return (m // num_stages) * num_stages * virtual_stages \
+        + (m % num_stages)
 
 
 def _check_mesh(mesh, spec: PipelineSpec):
@@ -106,7 +153,10 @@ def pipeline_blocks(cfg, blocks, xs, positions, spec: PipelineSpec, *,
     documented per-micro-batch router-statistics deviation (DESIGN.md §6).
     """
     _check_mesh(mesh, spec)
-    staged = _split_stages(blocks, spec.num_stages)
+    if spec.virtual_stages < 1:
+        raise ValueError(
+            f"virtual_stages={spec.virtual_stages} must be >= 1")
+    staged = _split_stages(blocks, spec.num_stages, spec.virtual_stages)
     k = xs.shape[0]
     run = (_pipeline_partial_manual if compat.CAPS.partial_manual
            else _pipeline_full_manual)
@@ -135,37 +185,81 @@ def _stage_scan_fn(cfg, spec, positions, prefix_len):
 
 
 def _tick_loop(spec, stage, k, xs_full, enc_full, state0, aux0, run_stage):
-    """The 1F1B tick schedule shared by both shard_map flavours.
+    """The (interleaved) 1F1B tick schedule shared by both shard_map
+    flavours.
 
-    At tick t stage s computes micro-batch ``t - s`` (clipped; masked by
-    ``live``), then ppermutes its output one stage forward.  Works for any
-    S >= 1 and k >= 1: ticks = k + S - 1, warm-up/drain handled by the
-    live mask, so ``pipeline_k_auto``-chosen k needs no divisibility with
-    the stage count.
+    At tick t stage s inverts the interleaved timetable: with
+    ``t' = t - s``, ``p = t' mod S``, ``q = (t' - p) / S``, the live
+    work item is micro-batch ``m = (q // v)*S + p`` on virtual chunk
+    ``j = q mod v`` (global chunk ``j*S + s``), executing at its scheduled
+    tick ``sigma(m) + j*S + s``.  Idle ticks (warm-up/drain, ragged k)
+    compute on clipped indices and are masked by ``live`` — masked values
+    are never consumed by a live tick because a live chunk's producer
+    chunk was itself live one tick earlier.  Outputs move one stage
+    forward via ``ppermute``; with v > 1 the chunk chain wraps from stage
+    S-1 back to stage 0, so the permutation is cyclic.  Works for any
+    S >= 1, v >= 1 and k >= 1 — ``pipeline_k_auto``-chosen k needs no
+    divisibility with the stage count.
     """
     s_stages = spec.num_stages
-    ticks = k + s_stages - 1
-    perm = [(i, i + 1) for i in range(s_stages - 1)]
+    v = spec.virtual_stages
+    ticks = _sigma(k - 1, s_stages, v) + s_stages * v
 
     def tick(carry, t):
         state, aux_acc = carry
-        m = jnp.clip(t - stage, 0, k - 1)      # this stage's micro-batch
-        inp0 = jax.lax.dynamic_index_in_dim(xs_full, m, 0, keepdims=False)
-        cur = jnp.where(stage == 0, inp0, state)
+        tpr = t - stage
+        p = jnp.mod(tpr, s_stages)
+        q = (tpr - p) // s_stages
+        j = jnp.mod(q, v)                      # this stage's virtual chunk
+        m = (q // v) * s_stages + p            # this stage's micro-batch
+        live = (tpr >= 0) & (m >= 0) & (m < k)
+        m_idx = jnp.clip(m, 0, k - 1)
+        j_idx = jnp.clip(j, 0, v - 1)
+        inp0 = jax.lax.dynamic_index_in_dim(xs_full, m_idx, 0,
+                                            keepdims=False)
+        # only global chunk 0 (stage 0, virtual chunk 0) takes fresh
+        # micro-batch input; every other chunk consumes the carried state
+        cur = jnp.where((stage == 0) & (j_idx == 0), inp0, state)
         enc = None
         if enc_full is not None:
-            enc = jax.lax.dynamic_index_in_dim(enc_full, m, 0,
+            enc = jax.lax.dynamic_index_in_dim(enc_full, m_idx, 0,
                                                keepdims=False)
-        y, aux = run_stage(cur, enc)
-        nxt = jax.lax.ppermute(y, spec.axis, perm)
-        live = (t >= stage) & (t < stage + k)
+        y, aux = run_stage(cur, enc, j_idx)
+        if s_stages == 1:
+            nxt = y                            # chunk chain stays local
+        elif v > 1:
+            nxt = jax.lax.ppermute(
+                y, spec.axis,
+                [(i, (i + 1) % s_stages) for i in range(s_stages)])
+        else:
+            nxt = jax.lax.ppermute(
+                y, spec.axis, [(i, i + 1) for i in range(s_stages - 1)])
         aux_acc = aux_acc + jnp.where(live, aux, 0.0)
         return (nxt, aux_acc), y
 
     (_, aux_acc), ys = jax.lax.scan(tick, (state0, aux0), jnp.arange(ticks))
-    # last stage's outputs live at ticks [S-1, S-1+k)
-    out = jax.lax.dynamic_slice_in_dim(ys, s_stages - 1, k, axis=0)
+    # micro-batch m leaves the last chunk (on stage S-1) at tick
+    # sigma(m) + S*v - 1; for v == 1 these are the contiguous ticks
+    # [S-1, S-1+k) of the plain schedule
+    out_ticks = jnp.asarray(
+        [_sigma(m, s_stages, v) + s_stages * v - 1 for m in range(k)])
+    out = jnp.take(ys, out_ticks, axis=0)
     return out, aux_acc
+
+
+def _chunk_picker(blocks_local, virtual_stages: int):
+    """``j -> one chunk's layer stack`` from [v, L/(S*v), ...] leaves.
+
+    v == 1 resolves the (sole) chunk statically; v > 1 gathers the traced
+    chunk index per tick — its autodiff transpose scatter-adds each
+    tick's weight gradient into the right chunk.
+    """
+    if virtual_stages == 1:
+        chunk0 = jax.tree.map(lambda a: a[0], blocks_local)
+        return lambda j: chunk0
+    return lambda j: jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, j, 0, keepdims=False),
+        blocks_local)
 
 
 def _pipeline_partial_manual(cfg, staged, xs, positions, spec, mesh,
@@ -187,8 +281,9 @@ def _pipeline_partial_manual(cfg, staged, xs, positions, spec, mesh,
     stage_scan = _stage_scan_fn(cfg, spec, positions, prefix_len)
 
     def per_stage(blocks_stage, xs_full, enc_full):
-        # manual over 'pod': blocks_stage leaves [1, L/S, ...]
+        # manual over 'pod': blocks_stage leaves [1, v, L/(S*v), ...]
         blocks_local = jax.tree.map(lambda a: a[0], blocks_stage)
+        pick = _chunk_picker(blocks_local, spec.virtual_stages)
         stage = jax.lax.axis_index(spec.axis)
         # carries differ per stage -> mark them varying over the pod axis
         state = compat.mark_varying(
@@ -196,7 +291,7 @@ def _pipeline_partial_manual(cfg, staged, xs, positions, spec, mesh,
         aux0 = compat.mark_varying(jnp.float32(0.0), (spec.axis,))
         out, aux_acc = _tick_loop(
             spec, stage, k, xs_full, enc_full, state, aux0,
-            lambda cur, enc: stage_scan(blocks_local, cur, enc, pin))
+            lambda cur, enc, j: stage_scan(pick(j), cur, enc, pin))
         # stack a stage axis so out_specs=P('pod') can concatenate
         return out[None], aux_acc[None]
 
@@ -240,12 +335,14 @@ def _pipeline_full_manual(cfg, staged, xs, positions, spec, mesh,
         del pos  # replicated copy of ``positions`` (kept as an explicit
         # argument: legacy shard_map cannot close over traced values)
         blocks_local = jax.tree.map(lambda a: a[0], blocks_stage)
+        pick = _chunk_picker(blocks_local, spec.virtual_stages)
         stage = stage_ids[0]
         state = jnp.zeros(xs_full.shape[1:], xs_full.dtype)
         aux0 = jnp.float32(0.0)
         out, aux_acc = _tick_loop(
             spec, stage, k, xs_full, enc_full, state, aux0,
-            lambda cur, enc: stage_scan(blocks_local, cur, enc, lambda y: y))
+            lambda cur, enc, j: stage_scan(pick(j), cur, enc,
+                                           lambda y: y))
         if other_axes:
             # per-data-slice aux -> batch mean (replicated axes unchanged)
             aux_acc = jax.lax.pmean(aux_acc, other_axes)

@@ -177,7 +177,13 @@ def shard_batch(batch_x, batch_y, b: np.ndarray, k: int):
 
 
 def batch_wall_time(profile, fleet, plan: Plan) -> float:
-    """Simulated wall time of one C2P2SL batch under the plan."""
+    """Simulated wall time of one C2P2SL batch under the plan.
+
+    Honors ``plan.v`` (interleaved virtual stages, AO-selected when
+    ``algorithm1(..., v_cap>1)``): compute is v-independent — gradient
+    accumulation over k micro-batches is identical math at any chunking
+    — so only the simulated schedule time changes.
+    """
     t = task_times(profile, fleet, plan)
-    ms, _ = simulate_c2p2sl(t, plan.k)
+    ms, _ = simulate_c2p2sl(t, plan.k, virtual_stages=plan.v)
     return ms

@@ -8,7 +8,7 @@ abstraction the TPU pipeline (repro/parallel/pipeline.py) uses.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ao import (algorithm1, feasible_l, lemma1_k, makespan_k,
-                           solve_batch_p3, solve_tau_p5)
+                           pipeline_k_auto, solve_batch_p3, solve_tau_p5)
 from repro.core.costs import resnet18_profile
 from repro.core.schedule import Plan, bubble_rate, simulate_c2p2sl, task_times
 from repro.wireless.fleet import sample_fleet
@@ -26,6 +26,60 @@ def test_lemma1_matches_formula():
         assert k == max(1, min(expect, int(np.min(b))))
     else:
         assert k == int(np.min(b))  # capped by micro-batch granularity
+
+
+def test_lemma1_k_divides_by_virtual_stages():
+    """Interleaving streams k*v slices, so the steady-state k divides by
+    v (ceil), while the sample-granularity cap min_i b_i does not."""
+    fleet = sample_fleet(4, seed=3)
+    b = np.full(4, 64.0)
+    tau = np.full(4, fleet.channel.frame_s / 4)
+    for l in (1, 2, 3):
+        k1 = lemma1_k(PROF, fleet, l, b, tau)
+        t1 = task_times(PROF, fleet, Plan(l=l, k=1, b=b, tau=tau))
+        eta = t1.bs_work / float(np.min(t1.uplink + t1.downlink))
+        for v in (2, 4):
+            kv = lemma1_k(PROF, fleet, l, b, tau, virtual_stages=v)
+            if eta < 1.0:
+                want = -(-int(np.floor(1.0 / (1.0 - eta))) // v)
+                assert kv == max(1, min(want, int(np.min(b))))
+            else:
+                assert kv == k1        # granularity-capped: v can't help
+
+
+def test_pipeline_k_auto_virtual_stages():
+    # eta = 0.9 -> k* = 10 at v=1; interleave divides the steady-state k
+    assert pipeline_k_auto(0.9, 1.0, k_cap=64) == 10
+    assert pipeline_k_auto(0.9, 1.0, k_cap=64, virtual_stages=2) == 5
+    assert pipeline_k_auto(0.9, 1.0, k_cap=64, virtual_stages=3) == 4
+    assert pipeline_k_auto(0.9, 1.0, k_cap=64, virtual_stages=16) == 1
+    # compute-bound: k is the granularity cap regardless of v
+    assert pipeline_k_auto(10.0, 1.0, k_cap=16, virtual_stages=4) == 16
+
+
+def test_algorithm1_joint_v_trade():
+    """v_cap=4 extends subproblem 1 to the joint (l, k, v) trade: the
+    returned plan's interleave strictly beats running the SAME plan
+    without it (simulate monotonicity), and the reported bubble shrinks
+    accordingly.  The AO trajectories (b, tau differ across basins) are
+    only compared loosely — the AO is a heuristic, not an exact solver."""
+    from repro.core.schedule import simulate_c2p2sl as sim
+    fleet = sample_fleet(8, seed=0)
+    res1 = algorithm1(PROF, fleet, batch=512)
+    resv = algorithm1(PROF, fleet, batch=512, v_cap=4)
+    assert res1.plan.v == 1                  # default stays plain 1F1B
+    assert 1 <= resv.plan.v <= 4
+    tv = task_times(PROF, fleet, resv.plan)
+    msv, _ = sim(tv, resv.plan.k, virtual_stages=resv.plan.v)
+    ms_plain, _ = sim(tv, resv.plan.k)
+    assert msv <= ms_plain + 1e-12
+    if resv.plan.v > 1:
+        assert msv < ms_plain
+        assert resv.bubble < bubble_rate(tv, resv.plan.k, 1)
+        assert resv.bubble < res1.bubble
+    t1 = task_times(PROF, fleet, res1.plan)
+    ms1, _ = sim(t1, res1.plan.k)
+    assert msv <= ms1 * 1.05                 # same ballpark across basins
 
 
 def test_p3_respects_constraints():

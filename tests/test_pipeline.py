@@ -25,6 +25,59 @@ def run_sub(code: str, devices: int = 8, timeout=600):
     return out.stdout
 
 
+def test_interleaved_single_stage_matches_reference():
+    """Fast in-process check of the interleaved tick loop: S=1 needs no
+    extra devices, but v>1 still exercises the full interleaved schedule
+    (sigma spacing, per-tick chunk gather, chunk-chain carry) plus the
+    masked-row padding path (batch 6, k 4)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.data import lm_batch_for
+    from repro.models import LM, LMConfig
+    from repro.parallel.compat import make_mesh, mesh_context
+    from repro.parallel.pipeline import PipelineSpec, make_pipelined_loss
+
+    cfg = LMConfig(name="t", num_layers=4, d_model=32, n_heads=4, n_kv=2,
+                   d_ff=64, vocab=128, dtype="float32")
+    m = LM(cfg)
+    p = m.init(jax.random.key(0))
+    batch = lm_batch_for(cfg, 6, 16)
+    mesh = make_mesh((1,), ("pod",))
+    loss_ref, _ = m.forward(p, batch)
+    g_ref = jax.grad(lambda p: m.forward(p, batch)[0])(p)
+    for v in (1, 2, 4):
+        spec = PipelineSpec(num_stages=1, microbatches=4, virtual_stages=v)
+        loss_fn = make_pipelined_loss(m, spec, mesh=mesh)
+        with mesh_context(mesh):
+            loss_pipe, _ = jax.jit(loss_fn)(p, batch)
+            g_pipe = jax.jit(jax.grad(lambda p: loss_fn(p, batch)[0]))(p)
+        assert abs(float(loss_ref) - float(loss_pipe)) < 1e-5, f"v={v}"
+        d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         g_ref, g_pipe)
+        assert max(jax.tree.leaves(d)) < 1e-5, f"v={v}"
+
+
+def test_split_stages_round_robin_and_divisibility():
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.parallel.pipeline import _sigma, _split_stages
+
+    blocks = {"w": jnp.arange(8)[:, None] * jnp.ones((8, 3))}
+    staged = _split_stages(blocks, 2, 2)            # S=2, v=2 -> 4 chunks
+    # chunk c = j*S + s holds layers [c*2, c*2+2): stage s, virtual j
+    w = np.asarray(staged["w"])
+    assert w.shape == (2, 2, 2, 3)
+    assert w[0, 0, :, 0].tolist() == [0, 1]         # chunk 0
+    assert w[1, 0, :, 0].tolist() == [2, 3]         # chunk 1
+    assert w[0, 1, :, 0].tolist() == [4, 5]         # chunk 2
+    assert w[1, 1, :, 0].tolist() == [6, 7]         # chunk 3
+    with pytest.raises(ValueError, match="not divisible"):
+        _split_stages(blocks, 3, 2)
+    # sigma: v=1 is the identity schedule; groups of S spaced S*v apart
+    assert [_sigma(m, 2, 1) for m in range(4)] == [0, 1, 2, 3]
+    assert [_sigma(m, 2, 2) for m in range(6)] == [0, 1, 4, 5, 8, 9]
+
+
 @pytest.mark.slow
 def test_pipeline_matches_plain_model():
     out = run_sub("""
@@ -85,6 +138,88 @@ def test_pipeline_four_stages():
     """, devices=8)
     res = json.loads(out.strip().splitlines()[-1])
     assert abs(res["ref"] - res["pipe"]) < 1e-5
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("k", [4, 5])
+def test_interleaved_pipeline_matches_v1_and_reference(k):
+    """virtual_stages=2 gradients == the v=1 pipeline == the unpipelined
+    model, for divisible (k=4) and ragged (k=5, batch 10) micro-batch
+    counts, on whichever lowering the installed JAX selects."""
+    out = run_sub(f"""
+        import jax, json
+        import jax.numpy as jnp
+        from repro.models import LM, LMConfig
+        from repro.data import lm_batch_for
+        from repro.parallel.compat import make_mesh, mesh_context
+        from repro.parallel.pipeline import PipelineSpec, make_pipelined_loss
+
+        cfg = LMConfig(name='t', num_layers=8, d_model=32, n_heads=4, n_kv=2,
+                       d_ff=64, vocab=128, dtype='float32')
+        m = LM(cfg)
+        p = m.init(jax.random.key(1))
+        batch = lm_batch_for(cfg, 10, 16)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        loss_ref, _ = m.forward(p, batch)
+        g_ref = jax.grad(lambda p: m.forward(p, batch)[0])(p)
+        grads = {{}}
+        losses = {{}}
+        for v in (1, 2):
+            spec = PipelineSpec(num_stages=2, microbatches={k},
+                                virtual_stages=v)
+            loss_fn = make_pipelined_loss(m, spec, mesh=mesh)
+            with mesh_context(mesh):
+                loss_pipe, _ = jax.jit(loss_fn)(p, batch)
+                grads[v] = jax.jit(
+                    jax.grad(lambda p: loss_fn(p, batch)[0]))(p)
+            losses[v] = float(loss_pipe)
+        dmax = lambda a, b: max(jax.tree.leaves(jax.tree.map(
+            lambda x, y: float(jnp.max(jnp.abs(x - y))), a, b)))
+        print(json.dumps({{
+            "loss_ref": float(loss_ref), "loss_v1": losses[1],
+            "loss_v2": losses[2],
+            "gdiff_v2_ref": dmax(grads[2], g_ref),
+            "gdiff_v2_v1": dmax(grads[2], grads[1])}}))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert abs(res["loss_ref"] - res["loss_v2"]) < 1e-5
+    assert abs(res["loss_v1"] - res["loss_v2"]) < 1e-5
+    assert res["gdiff_v2_ref"] < 1e-5
+    assert res["gdiff_v2_v1"] < 1e-5
+
+
+@pytest.mark.slow
+def test_interleaved_four_stages_v2():
+    """S=4 x v=2 (8 model chunks over 8 layers) on a 4-wide pod axis."""
+    out = run_sub("""
+        import jax, json
+        import jax.numpy as jnp
+        from repro.models import LM, LMConfig
+        from repro.data import lm_batch_for
+        from repro.parallel.compat import make_mesh, mesh_context
+        from repro.parallel.pipeline import PipelineSpec, make_pipelined_loss
+
+        cfg = LMConfig(name='t', num_layers=8, d_model=32, n_heads=4, n_kv=2,
+                       d_ff=64, vocab=128, dtype='float32')
+        m = LM(cfg)
+        p = m.init(jax.random.key(1))
+        batch = lm_batch_for(cfg, 8, 16)
+        mesh = make_mesh((4, 2, 1), ("pod", "data", "model"))
+        loss_ref, _ = m.forward(p, batch)
+        g_ref = jax.grad(lambda p: m.forward(p, batch)[0])(p)
+        spec = PipelineSpec(num_stages=4, microbatches=8, virtual_stages=2)
+        loss_fn = make_pipelined_loss(m, spec, mesh=mesh)
+        with mesh_context(mesh):
+            loss_pipe, _ = jax.jit(loss_fn)(p, batch)
+            g_pipe = jax.jit(jax.grad(lambda p: loss_fn(p, batch)[0]))(p)
+        d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         g_ref, g_pipe)
+        print(json.dumps({"ref": float(loss_ref), "pipe": float(loss_pipe),
+                          "gdiff": max(jax.tree.leaves(d))}))
+    """, devices=8)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert abs(res["ref"] - res["pipe"]) < 1e-5
+    assert res["gdiff"] < 1e-5
 
 
 @pytest.mark.slow

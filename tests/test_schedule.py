@@ -4,8 +4,9 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.costs import lm_profile, resnet18_profile
-from repro.core.schedule import (Plan, bubble_rate, simulate_c2p2sl,
-                                 simulate_epsl, simulate_psl, simulate_sl,
+from repro.core.schedule import (Plan, TaskTimes, bubble_rate,
+                                 simulate_c2p2sl, simulate_epsl,
+                                 simulate_psl, simulate_sl,
                                  steady_state_ok, task_times)
 from repro.wireless.fleet import sample_fleet
 
@@ -49,6 +50,54 @@ def test_bubble_rate_definition():
     t_work = plan.k * (t.bs_fwd + t.bs_bwd)
     assert br == pytest.approx(t_idle / (t_idle + t_work))
     assert 0.0 < br < 1.0
+
+
+def test_bubble_rate_strictly_decreases_in_v():
+    """Interleaving shrinks the idle term by v: BR(v+1) < BR(v)."""
+    prof = resnet18_profile()
+    fleet, plan = make_plan(k=4)
+    t = task_times(prof, fleet, plan)
+    rates = [bubble_rate(t, plan.k, v) for v in (1, 2, 3, 4, 8)]
+    for hi, lo in zip(rates, rates[1:]):
+        assert lo < hi
+    # the (S-1)/v-style shrink: the idle term divides exactly by v
+    t_idle = np.max(t.ue_fwd + t.uplink) + np.max(t.downlink + t.ue_bwd)
+    t_work = plan.k * t.bs_work
+    for v in (2, 4):
+        assert bubble_rate(t, plan.k, v) == pytest.approx(
+            (t_idle / v) / (t_idle / v + t_work))
+
+
+def test_simulate_c2p2sl_interleaved_shrinks_makespan():
+    """v > 1 = the same work at 1/v task granularity: the makespan never
+    grows, strictly shrinks in the steady-state regime, and exactly
+    equals the (t/v, k*v) re-granularized schedule."""
+    prof = resnet18_profile()
+    fleet, plan = make_plan(n=8, batch=512, l=1, k=8)
+    t = task_times(prof, fleet, plan)
+    ms1, _ = simulate_c2p2sl(t, plan.k)
+    prev = ms1
+    for v in (2, 4):
+        msv, _ = simulate_c2p2sl(t, plan.k, virtual_stages=v)
+        assert msv <= prev + 1e-9
+        prev = msv
+        tv = TaskTimes(ue_fwd=t.ue_fwd / v, uplink=t.uplink / v,
+                       bs_fwd=t.bs_fwd / v, bs_bwd=t.bs_bwd / v,
+                       downlink=t.downlink / v, ue_bwd=t.ue_bwd / v)
+        ms_regran, _ = simulate_c2p2sl(tv, plan.k * v)
+        assert msv == pytest.approx(ms_regran, rel=1e-12)
+    if steady_state_ok(t, plan.k):
+        ms2, _ = simulate_c2p2sl(t, plan.k, virtual_stages=2)
+        assert ms2 < ms1
+
+
+def test_plan_v_defaults_to_plain_1f1b():
+    fleet, plan = make_plan()
+    assert plan.v == 1
+    t = task_times(resnet18_profile(), fleet, plan)
+    assert bubble_rate(t, plan.k) == bubble_rate(t, plan.k, 1)
+    assert simulate_c2p2sl(t, plan.k)[0] == pytest.approx(
+        simulate_c2p2sl(t, plan.k, virtual_stages=1)[0])
 
 
 def test_c2p2sl_beats_psl_with_pipelining():
