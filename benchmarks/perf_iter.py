@@ -37,6 +37,31 @@ def run_cell(arch, shape, multi=False, *, pipeline_k=0, pipeline_v=1,
     return rec, prof
 
 
+def auto_plan_compare(rec, *, num_layers=None):
+    """Hand-picked vs auto-picked plan for one lowered cell.
+
+    Runs the roofline planner on the record and evaluates BOTH plans
+    under the same ``plan_wall_time`` model, so the comparison is
+    apples-to-apples without re-lowering.  Returns the dict stored under
+    ``rec['auto_plan_compare']``.
+    """
+    from repro.analysis.autotune import (choose_plan, plan_inputs_from_record,
+                                         plan_wall_time)
+    # num_stages comes from the record's own pod mesh axis; raises
+    # ValueError on single-pod records (callers validate flags up front
+    # so this never fires after an expensive compile)
+    inp = plan_inputs_from_record(rec, num_layers=num_layers)
+    plan = choose_plan(inp)
+    hand_k = int(rec.get("pipeline_k", 0) or 1)
+    hand_v = int(rec.get("pipeline_v", 1) or 1)
+    hand_wall = plan_wall_time(inp, hand_k, hand_v)
+    return {
+        "hand": {"k": hand_k, "v": hand_v, "wall_s": hand_wall},
+        "auto": plan.to_dict(),
+        "auto_vs_hand": hand_wall / plan.wall_s if plan.wall_s > 0 else 1.0,
+    }
+
+
 def show(rec, prof, label=""):
     rl = rec["roofline"]
     m = rec["memory"]
@@ -66,6 +91,10 @@ def main():
     ap.add_argument("--pipeline-k", type=int, default=0)
     ap.add_argument("--pipeline-v", type=int, default=1,
                     help="interleaved virtual stages per pipeline stage")
+    ap.add_argument("--pipeline-auto", action="store_true",
+                    help="run the roofline auto-planner on the lowered "
+                         "cell and record hand-picked vs auto-picked "
+                         "(k, v) under the same wall-time model")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--cast-gathers", action="store_true")
     ap.add_argument("--master-fp32", action="store_true",
@@ -82,6 +111,12 @@ def main():
     ap.add_argument("--out", default="results/perf_iters.jsonl")
     args = ap.parse_args()
 
+    if args.pipeline_auto and (args.mesh != "multi" or not args.pipeline_k):
+        # fail BEFORE the expensive lower+compile: the planner extracts
+        # its link time from the pipelined record's ppermute bytes
+        raise SystemExit("--pipeline-auto needs --mesh multi and a "
+                         "--pipeline-k cell (the planner reads the pod "
+                         "pipeline's collective-permute bytes)")
     seq = None
     if args.no_seq_shard:
         seq = False
@@ -96,10 +131,28 @@ def main():
                          pure_dp=args.pure_dp,
                          tpu_model=args.tpu_model)
     show(rec, prof, args.label)
+    if args.pipeline_auto:
+        from repro.configs import get_arch
+        try:
+            cmp = auto_plan_compare(
+                rec, num_layers=get_arch(args.arch).full.num_layers)
+        except ValueError as e:
+            # never discard the compiled record over a planner hiccup
+            rec["auto_plan_compare"] = {"error": str(e)}
+            print(f"  auto plan FAILED: {e}")
+        else:
+            rec["auto_plan_compare"] = cmp
+            a = cmp["auto"]
+            print(f"  auto plan: k={a['k']} v={a['v']}  "
+                  f"{a['wall_s'] * 1e3:.2f} ms/batch vs hand "
+                  f"k={cmp['hand']['k']} v={cmp['hand']['v']} "
+                  f"{cmp['hand']['wall_s'] * 1e3:.2f} ms "
+                  f"({cmp['auto_vs_hand']:.2f}x)")
     rec["label"] = args.label
     rec["knobs"] = {"cast_gathers": args.cast_gathers, "seq_shard": seq,
                     "pipeline_k": args.pipeline_k,
                     "pipeline_v": args.pipeline_v,
+                    "pipeline_auto": args.pipeline_auto,
                     "microbatches": args.microbatches,
                     "master_fp32": args.master_fp32,
                     "pure_dp": args.pure_dp,

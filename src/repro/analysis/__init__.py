@@ -1,2 +1,5 @@
 from repro.analysis.roofline import (RooflineTerms, collective_bytes_from_hlo,
                                      roofline_from_compiled, HW)
+# The auto-planner (repro.analysis.autotune) is imported by module path, not
+# re-exported here: it doubles as the `python -m repro.analysis.autotune`
+# CLI, and a package-level import would shadow runpy's module execution.

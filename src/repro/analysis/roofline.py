@@ -25,6 +25,10 @@ HW = {
     "dcn_bw": 3.1e9,                # B/s per chip across pods (hosts share
                                     # ~200 Gb/s NICs over 8 chips)
     "hbm_bytes": 16 * 1024 ** 3,
+    "dcn_latency_s": 25e-6,         # per-message DCN overhead: the fixed
+                                    # cost the auto-planner bills per
+                                    # micro-batch ppermute hop across pods
+                                    # (autotune.py hop_overhead_s default)
 }
 
 _DTYPE_BYTES = {

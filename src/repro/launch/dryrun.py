@@ -172,6 +172,20 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
             "bytes_accessed": float(ca_flat.get("bytes accessed", 0.0)),
         },
     }
+    if pipeline_k and shape.kind == "train":
+        # Machine-readable auto-plan: what (k, v) the roofline planner
+        # would pick for this cell (feeds train.py --plan-roofline and
+        # benchmarks/perf_iter.py --pipeline-auto).
+        from repro.analysis.autotune import (choose_plan,
+                                             plan_inputs_from_record)
+        try:
+            inp = plan_inputs_from_record(
+                record, num_stages=mesh.shape["pod"],
+                k_cap=max(1, shape.global_batch // mesh.shape["data"]),
+                num_layers=cfg.num_layers)
+            record["auto_plan"] = choose_plan(inp).to_dict()
+        except (ValueError, KeyError) as e:
+            record["auto_plan"] = {"error": str(e)}
     return record, compiled
 
 
@@ -188,6 +202,9 @@ def main():
                     help="interleaved virtual stages per pipeline stage")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--plan-out", default=None,
+                    help="also write the cells' roofline auto-plans "
+                         "(repro.analysis.autotune) to this JSON file")
     ap.add_argument("--skip-done", action="store_true",
                     help="skip cells already present in --out")
     args = ap.parse_args()
@@ -210,6 +227,7 @@ def main():
                     pass
 
     n_ok = n_skip = n_fail = 0
+    plans = []
     for arch_name in archs:
         arch = get_arch(arch_name)
         for shape_name in shapes:
@@ -247,12 +265,25 @@ def main():
                           f"-> {rl['bottleneck']}", flush=True)
                     with open(args.out, "a") as f:
                         f.write(json.dumps(rec) + "\n")
+                    if "auto_plan" in rec:
+                        ap_rec = rec["auto_plan"]
+                        plans.append({"arch": arch_name, "shape": shape_name,
+                                      "mesh": mesh_name, "plan": ap_rec})
+                        if "k" in ap_rec:
+                            print(f"  auto plan: k={ap_rec['k']} "
+                                  f"v={ap_rec['v']} "
+                                  f"({ap_rec['speedup']:.2f}x vs "
+                                  f"unpipelined)", flush=True)
                     n_ok += 1
                     del compiled
                 except Exception:
                     n_fail += 1
                     print(f"  FAIL {arch_name} x {shape_name} x {mesh_name}")
                     traceback.print_exc()
+    if args.plan_out:
+        with open(args.plan_out, "w") as f:
+            json.dump(plans, f, indent=1)
+        print(f"wrote {len(plans)} auto-plan records to {args.plan_out}")
     print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), "
           f"{n_fail} failed")
     return 0 if n_fail == 0 else 1

@@ -52,6 +52,93 @@ def build_batch_iter(cfg, batch: int, seq: int, seed: int = 0):
     return gen
 
 
+def _parse_auto_int(value, flag: str):
+    """'auto' | int-string | int | None -> 'auto' | int | None."""
+    if value is None or isinstance(value, int):
+        return value
+    s = str(value).strip().lower()
+    if s == "auto":
+        return "auto"
+    try:
+        return int(s)
+    except ValueError:
+        raise SystemExit(
+            f"{flag} must be an integer or 'auto', got {value!r}")
+
+
+def resolve_pipeline_plan(*, pipeline_stages: int, pipeline_k,
+                          virtual_stages, cfg, batch: int, seq: int,
+                          plan_roofline: str | None = None):
+    """Resolve the (S, k, v) pipeline decision from flags + the planner.
+
+    Returns ``(PipelineSpec | None, info)``.  ``info`` records where each
+    value came from — ``flag`` (hand-supplied integer), ``auto`` (the
+    roofline planner, asked for explicitly), ``auto:default`` (k was
+    unset: the planner picks it, replacing the old silent k=4 default),
+    or ``default`` (v unset stays 1).  When the planner runs, ``info``
+    carries its full ``AutoPlan`` evidence under ``"plan"``.
+    """
+    k_arg = _parse_auto_int(pipeline_k, "--pipeline-k")
+    v_arg = _parse_auto_int(virtual_stages, "--virtual-stages")
+    if pipeline_stages <= 1:
+        if v_arg not in (None, 1):
+            raise SystemExit(
+                "--virtual-stages requires --pipeline-stages > 1 "
+                "(interleaving subdivides pipeline stages)")
+        if k_arg is not None:
+            raise SystemExit(
+                "--pipeline-k requires --pipeline-stages > 1 "
+                "(use --microbatches for plain gradient accumulation)")
+        return None, {"enabled": False}
+    if isinstance(k_arg, int) and k_arg < 1:
+        raise SystemExit(f"--pipeline-k {k_arg} must be >= 1")
+    if isinstance(v_arg, int) and v_arg < 1:
+        raise SystemExit(f"--virtual-stages {v_arg} must be >= 1")
+    k_src = "flag" if isinstance(k_arg, int) \
+        else ("auto" if k_arg == "auto" else "auto:default")
+    v_src = "flag" if isinstance(v_arg, int) \
+        else ("auto" if v_arg == "auto" else "default")
+
+    from repro.parallel.pipeline import PipelineSpec
+    if isinstance(k_arg, int) and (isinstance(v_arg, int) or v_arg is None):
+        spec = PipelineSpec(num_stages=pipeline_stages, microbatches=k_arg,
+                            virtual_stages=v_arg if v_arg else 1)
+        return spec, {"enabled": True, "k": spec.microbatches,
+                      "v": spec.virtual_stages, "k_source": k_src,
+                      "v_source": v_src, "plan": None}
+
+    import dataclasses as _dc
+
+    from repro.analysis import autotune
+    if plan_roofline:
+        try:
+            record = autotune.load_record(plan_roofline)
+            inp = autotune.plan_inputs_from_record(
+                record, num_stages=pipeline_stages,
+                num_layers=cfg.num_layers)
+        except (OSError, ValueError) as e:   # unreadable / unpipelined record
+            raise SystemExit(f"--plan-roofline {plan_roofline}: {e}")
+        inp_src = plan_roofline
+    else:
+        inp = autotune.plan_inputs_from_cfg(
+            cfg, batch=batch, seq=seq, num_stages=pipeline_stages)
+        inp_src = "config estimate (no --plan-roofline)"
+    # a micro-batch needs at least one sample row
+    inp = _dc.replace(inp, k_cap=max(1, min(inp.k_cap, batch)))
+    try:
+        spec, plan = PipelineSpec.auto_plan(
+            inp,
+            k_fixed=k_arg if isinstance(k_arg, int) else None,
+            v_fixed=v_arg if isinstance(v_arg, int)
+            else (1 if v_arg is None else None))
+    except ValueError as e:               # e.g. S*v does not divide layers
+        raise SystemExit(str(e))
+    return spec, {"enabled": True, "k": spec.microbatches,
+                  "v": spec.virtual_stages, "k_source": k_src,
+                  "v_source": v_src, "roofline": inp_src,
+                  "plan": plan.to_dict()}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -65,13 +152,23 @@ def main(argv=None):
     ap.add_argument("--pipeline-stages", type=int, default=0,
                     help="S>1: run the block stack as a C2P2SL pipeline "
                          "over a pod axis of S local devices")
-    ap.add_argument("--pipeline-k", type=int, default=4,
-                    help="micro-batches per pipelined batch")
-    ap.add_argument("--virtual-stages", type=int, default=1,
+    ap.add_argument("--pipeline-k", default=None,
+                    help="micro-batches per pipelined batch: an integer, "
+                         "or 'auto' to let the roofline planner pick "
+                         "(unset also auto-plans — no more silent k=4)")
+    ap.add_argument("--virtual-stages", default=None,
                     help="v>1: interleaved virtual stages — each pipeline "
                          "stage holds v round-robin model chunks, "
                          "shrinking the bubble to (S-1)/v ticks per "
-                         "direction at the same k")
+                         "direction at the same k; 'auto' lets the "
+                         "planner trade the extra ppermute volume "
+                         "against the bubble shrink (unset: 1)")
+    ap.add_argument("--plan-roofline", default=None,
+                    help="dry-run record (JSON/JSONL) driving the "
+                         "auto-planner; default: compile-free config "
+                         "estimate (repro.analysis.autotune)")
+    ap.add_argument("--plan-out", default=None,
+                    help="write the resolved pipeline plan as JSON")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=20)
@@ -95,23 +192,33 @@ def main(argv=None):
             state = ckpt_lib.restore(args.ckpt_dir, last, state)
             print(f"resumed from step {last}")
 
-    pipeline = None
+    pipeline, plan_info = resolve_pipeline_plan(
+        pipeline_stages=args.pipeline_stages,
+        pipeline_k=args.pipeline_k,
+        virtual_stages=args.virtual_stages,
+        cfg=cfg, batch=args.batch, seq=args.seq,
+        plan_roofline=args.plan_roofline)
     mesh = None
-    if args.pipeline_stages > 1:
+    if pipeline is not None:
         if args.microbatches != 1:
             raise SystemExit(
                 "--microbatches (gradient accumulation) and "
                 "--pipeline-stages are mutually exclusive: the pipeline "
                 "micro-batches with --pipeline-k instead")
         from repro.launch.mesh import make_host_mesh
-        from repro.parallel.pipeline import PipelineSpec
         mesh = make_host_mesh(pod=args.pipeline_stages)
-        pipeline = PipelineSpec(num_stages=args.pipeline_stages,
-                                microbatches=args.pipeline_k,
-                                virtual_stages=args.virtual_stages)
-    elif args.virtual_stages > 1:
-        raise SystemExit("--virtual-stages requires --pipeline-stages > 1 "
-                         "(interleaving subdivides pipeline stages)")
+        line = (f"pipeline: S={pipeline.num_stages} "
+                f"k={pipeline.microbatches} [{plan_info['k_source']}] "
+                f"v={pipeline.virtual_stages} [{plan_info['v_source']}]")
+        if plan_info.get("plan"):
+            p = plan_info["plan"]
+            line += (f"  modeled {p['wall_s'] * 1e3:.1f} ms/batch, "
+                     f"{p['speedup']:.2f}x vs unpipelined, "
+                     f"bubble {p['bubble']:.3f}")
+        print(line, flush=True)
+    if args.plan_out:
+        with open(args.plan_out, "w") as f:
+            json.dump(plan_info, f, indent=1)
     step_fn = jax.jit(make_lm_train_step(model, opt,
                                          microbatches=args.microbatches,
                                          pipeline=pipeline, mesh=mesh))

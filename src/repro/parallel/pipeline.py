@@ -90,6 +90,39 @@ class PipelineSpec:
         return cls(num_stages=num_stages, microbatches=k,
                    virtual_stages=virtual_stages, axis=axis)
 
+    @classmethod
+    def auto_plan(cls, source, *, num_stages: int | None = None,
+                  k_fixed: int | None = None, v_fixed: int | None = None,
+                  axis: str = "pod", **extract_kwargs):
+        """Spec with (k, v) chosen by the roofline auto-planner.
+
+        ``source`` is a dry-run record dict (launch/dryrun.py JSONL), a
+        ``repro.analysis.autotune.PlanInputs``, or an already-chosen
+        ``AutoPlan``.  ``k_fixed`` / ``v_fixed`` pin one coordinate (a
+        hand flag overriding half of an auto plan).  Returns
+        ``(spec, AutoPlan)`` so callers can log/record the evidence.
+        """
+        from repro.analysis import autotune
+        if isinstance(source, autotune.AutoPlan):
+            if k_fixed is not None or v_fixed is not None:
+                raise ValueError(
+                    "k_fixed/v_fixed cannot re-pin an already-chosen "
+                    "AutoPlan — pass its PlanInputs (plan.inputs) to "
+                    "re-plan with pins")
+            plan = source
+        else:
+            inp = source
+            if isinstance(source, dict):
+                inp = autotune.plan_inputs_from_record(
+                    source, num_stages=num_stages, **extract_kwargs)
+            elif num_stages is not None and num_stages != inp.num_stages:
+                inp = inp.with_stages(num_stages)
+            plan = autotune.choose_plan(inp, k_fixed=k_fixed,
+                                        v_fixed=v_fixed)
+        spec = cls(num_stages=plan.num_stages, microbatches=plan.k,
+                   virtual_stages=plan.v, axis=axis)
+        return spec, plan
+
 
 def _split_stages(blocks, num_stages: int, virtual_stages: int = 1):
     """[L, ...] stacked block params -> [S, v, L/(S*v), ...].

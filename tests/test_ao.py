@@ -165,6 +165,33 @@ def test_algorithm1_always_feasible(n, seed):
     assert np.isfinite(res.bubble)
 
 
+@settings(deadline=None, max_examples=30)
+@given(stage_ms=st.integers(0, 2000), link_ms=st.integers(1, 1000),
+       k_cap=st.integers(1, 64), v=st.integers(1, 8))
+def test_property_pipeline_k_auto_within_cap(stage_ms, link_ms, k_cap, v):
+    """Property: the closed-form k is always in [1, k_cap] — the TPU
+    granularity bound is never relaxed, by any eta regime or any
+    interleave count."""
+    k = pipeline_k_auto(stage_ms / 1e3, link_ms / 1e3, k_cap=k_cap,
+                        virtual_stages=v)
+    assert 1 <= k <= k_cap
+    # interleaving never asks for MORE micro-batches
+    assert k <= pipeline_k_auto(stage_ms / 1e3, link_ms / 1e3, k_cap=k_cap)
+
+
+@settings(deadline=None, max_examples=10)
+@given(n=st.integers(2, 10), seed=st.integers(0, 500),
+       v_cap=st.sampled_from([1, 2, 4]))
+def test_property_algorithm1_cut_is_storage_feasible(n, seed, v_cap):
+    """Property: the AO's chosen cut respects the storage bound C2 for
+    the batch split it ships (feasible_l), and v stays within v_cap."""
+    fleet = sample_fleet(n, seed=seed)
+    res = algorithm1(PROF, fleet, batch=16 * n, max_iters=4, v_cap=v_cap)
+    assert res.plan.l in feasible_l(PROF, fleet, res.plan.b)
+    assert 1 <= res.plan.v <= v_cap
+    assert 1 <= res.plan.k <= max(int(np.min(res.plan.b[res.plan.b > 0])), 1)
+
+
 def test_makespan_k_robust_fallback():
     fleet = sample_fleet(4, seed=9)
     b = np.full(4, 64.0)

@@ -1,0 +1,430 @@
+"""Roofline-driven auto-planner (repro.analysis.autotune).
+
+Driven by the checked-in dry-run fixture tests/fixtures/roofline_smoke.json
+— no GPU and no compile in tier-1.  The acceptance property: the planner's
+chosen (k, v) beats or ties every neighboring (k±1, v/2, 2v) plan under
+the repo's own evaluators (simulate_c2p2sl directly, and batch_wall_time
+through the as_wireless bridge).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.autotune import (AutoPlan, PlanInputs, as_wireless,
+                                     choose_plan, hop_ratio, load_record,
+                                     neighbor_plans, plan_inputs_from_cfg,
+                                     plan_inputs_from_record,
+                                     plan_task_times, plan_wall_time,
+                                     schedule_ticks, tick_wall_time)
+from repro.core.schedule import simulate_c2p2sl
+from repro.sl import batch_wall_time
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "roofline_smoke.json")
+
+# Golden plan for the checked-in fixture (interior in both k and v, so
+# every neighbor is feasible and the dominance test is non-vacuous).
+GOLD_K, GOLD_V = 13, 2
+
+
+def fixture_record():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+def fixture_inputs():
+    return plan_inputs_from_record(fixture_record())
+
+
+def test_record_extraction_round_trips():
+    """The fixture encodes stage_fwd=0.1s, stage_bwd=0.2s, link=0.01s: the
+    masked-tick compute normalization (k*v/ticks) and the ppermute-bytes
+    inversion (pp * k / (2*ticks) / dcn_bw) must recover them exactly."""
+    inp = fixture_inputs()
+    assert inp.num_stages == 2
+    assert inp.stage_fwd_s == pytest.approx(0.1)
+    assert inp.stage_bwd_s == pytest.approx(0.2)
+    assert inp.link_s == pytest.approx(0.01)
+    assert inp.hop_overhead_s == pytest.approx(0.002)
+    assert (inp.k_cap, inp.v_cap, inp.num_layers) == (16, 4, 8)
+
+
+def test_record_extraction_includes_collective_term():
+    """Collective-bound records: the intra-stage (ICI) collective time is
+    stage work too — the stage time is the max of all three roofline
+    terms, not just compute/memory."""
+    rec = fixture_record()
+    rec["roofline"]["t_collective_s"] = 0.9                 # 0.9 * 8/9 = 0.8
+    inp = plan_inputs_from_record(rec)
+    assert inp.stage_fwd_s + inp.stage_bwd_s == pytest.approx(0.8)
+
+
+def test_record_extraction_uses_compiled_stage_count():
+    """Re-targeting S must not corrupt extraction: the tick-schedule
+    normalization always uses the stage count the record was COMPILED
+    with (here 2); the target S only re-labels the inputs (stage wall
+    time is S-invariant under a fixed chip budget)."""
+    inp4 = plan_inputs_from_record(fixture_record(), num_stages=4)
+    assert inp4.num_stages == 4
+    assert inp4.stage_fwd_s == pytest.approx(0.1)     # NOT 9/11-skewed
+    assert inp4.link_s == pytest.approx(0.01)
+
+
+def test_fixture_golden_plan():
+    plan = choose_plan(fixture_inputs())
+    assert (plan.num_stages, plan.k, plan.v) == (2, GOLD_K, GOLD_V)
+    assert plan.wall_s < plan.baseline_s          # pipelining pays
+    assert plan.speedup > 1.9                     # ~2x on this fixture
+    assert 0.0 < plan.bubble < 0.1
+
+
+def test_chosen_beats_neighbors_under_simulate():
+    """Acceptance: (k, v) never loses to (k±1, v/2, 2v) under the event
+    simulator applied to each candidate's own hop-billed task times."""
+    inp = fixture_inputs()
+    plan = choose_plan(inp)
+    neigh = neighbor_plans(inp, plan.k, plan.v)
+    # interior optimum -> all four neighbors exist
+    assert sorted(neigh) == sorted([(GOLD_K - 1, GOLD_V),
+                                    (GOLD_K + 1, GOLD_V),
+                                    (GOLD_K, 1), (GOLD_K, 2 * GOLD_V)])
+    for k, v in neigh:
+        ms, _ = simulate_c2p2sl(plan_task_times(inp, k, v), k,
+                                virtual_stages=v)
+        assert plan.wall_s <= ms * (1 + 1e-9), (k, v)
+
+
+def test_chosen_beats_neighbors_under_batch_wall_time():
+    """Same property through the wireless-side evaluator: as_wireless
+    exports each candidate as (profile, fleet, plan) and batch_wall_time
+    judges it."""
+    inp = fixture_inputs()
+    plan = choose_plan(inp)
+    chosen = batch_wall_time(*as_wireless(inp, plan.k, plan.v))
+    assert chosen == pytest.approx(plan.wall_s, rel=1e-12)
+    for k, v in neighbor_plans(inp, plan.k, plan.v):
+        assert chosen <= batch_wall_time(*as_wireless(inp, k, v)) \
+            * (1 + 1e-9), (k, v)
+
+
+def test_chosen_is_global_argmin():
+    """Stronger than neighbors: exhaustive grid re-evaluation."""
+    inp = fixture_inputs()
+    plan = choose_plan(inp)
+    for v in inp.feasible_v():
+        for k in range(1, inp.k_cap + 1):
+            assert plan.wall_s <= plan_wall_time(inp, k, v) * (1 + 1e-9), \
+                (k, v)
+
+
+def test_plan_wall_time_is_batch_wall_time():
+    """The planner objective IS the repo's schedule-layer evaluator."""
+    inp = fixture_inputs()
+    for k, v in [(1, 1), (4, 1), (8, 2), (16, 4), (13, 2)]:
+        assert plan_wall_time(inp, k, v) == pytest.approx(
+            batch_wall_time(*as_wireless(inp, k, v)), rel=1e-12)
+
+
+def test_hop_ratio_and_ticks():
+    # plain 1F1B: S-1 hops; interleave: S*v - 1 (the chunk chain wraps)
+    assert hop_ratio(2, 1) == 1.0
+    assert hop_ratio(2, 2) == 3.0
+    assert hop_ratio(4, 2) == pytest.approx(7.0 / 3.0)
+    assert hop_ratio(1, 4) == 0.0                 # S=1: no ppermute at all
+    # tick counts: k + S - 1 at v=1; sigma-spaced groups otherwise
+    assert schedule_ticks(8, 2, 1) == 9
+    assert schedule_ticks(8, 2, 2) == 16 + 1      # k*v + (S-1) for S | k
+    assert schedule_ticks(1, 4, 1) == 4
+
+
+def test_tick_model_s1_has_no_bubble():
+    inp = PlanInputs(num_stages=1, stage_fwd_s=0.1, stage_bwd_s=0.2,
+                     link_s=0.01, k_cap=8, v_cap=4)
+    for k in (1, 3, 8):
+        for v in (1, 2):
+            assert tick_wall_time(inp, k, v) == pytest.approx(0.3)
+
+
+def test_tick_model_v_trade():
+    """Compute-bound: v shrinks the bubble; comm-bound: per-tick link
+    time floors every tick, so v (more ticks) strictly hurts."""
+    compute_bound = PlanInputs(num_stages=4, stage_fwd_s=1.0,
+                               stage_bwd_s=2.0, link_s=1e-4, k_cap=8,
+                               v_cap=4)
+    assert tick_wall_time(compute_bound, 8, 2) \
+        < tick_wall_time(compute_bound, 8, 1)
+    comm_bound = PlanInputs(num_stages=4, stage_fwd_s=1e-4,
+                            stage_bwd_s=2e-4, link_s=1.0, k_cap=8, v_cap=4)
+    assert tick_wall_time(comm_bound, 8, 2) \
+        > tick_wall_time(comm_bound, 8, 1)
+
+
+def test_feasible_v_layer_divisibility():
+    inp = fixture_inputs()                        # 8 layers, S=2, v_cap=4
+    assert inp.feasible_v() == [1, 2, 4]
+    inp6 = PlanInputs(num_stages=2, stage_fwd_s=0.1, stage_bwd_s=0.2,
+                      link_s=0.01, k_cap=8, v_cap=4, num_layers=6)
+    assert inp6.feasible_v() == [1, 3]            # 6 % (2*v) == 0
+
+
+def test_choose_plan_pins():
+    inp = fixture_inputs()
+    plan = choose_plan(inp, k_fixed=4)
+    assert plan.k == 4
+    plan = choose_plan(inp, v_fixed=1)
+    assert plan.v == 1
+    # pinning both reproduces the hand plan's modeled time
+    plan = choose_plan(inp, k_fixed=8, v_fixed=1)
+    assert (plan.k, plan.v) == (8, 1)
+    assert plan.wall_s == pytest.approx(plan_wall_time(inp, 8, 1))
+
+
+def test_choose_plan_validates_pins():
+    """Pinned values get the same validation as the auto search: no raw
+    ZeroDivisionError for k=0, no un-runnable v emitted."""
+    inp = fixture_inputs()                        # 8 layers, S=2
+    with pytest.raises(ValueError, match=">= 1"):
+        choose_plan(inp, k_fixed=0)
+    with pytest.raises(ValueError, match=">= 1"):
+        choose_plan(inp, v_fixed=-1)
+    with pytest.raises(ValueError, match="no feasible"):
+        choose_plan(inp, v_fixed=3)               # 8 % (2*3) != 0
+    assert choose_plan(inp, v_fixed=4).v == 4     # 8 % (2*4) == 0
+
+
+def test_choose_plan_stage_candidates():
+    """Joint (S, k, v): under a fixed chip budget more stages only add
+    hops and bubble, so the planner keeps the smallest feasible S."""
+    inp = fixture_inputs()
+    plan = choose_plan(inp, stage_candidates=[2, 4])
+    assert plan.num_stages == 2
+    # stage candidates violating the layer count are skipped
+    plan = choose_plan(inp, stage_candidates=[3, 4])   # 8 % 3 != 0
+    assert plan.num_stages == 4
+    with pytest.raises(ValueError, match="no feasible"):
+        choose_plan(inp, stage_candidates=[3])
+
+
+def test_plan_inputs_from_cfg_estimate():
+    from repro.configs import get_arch
+    cfg = get_arch("qwen1.5-4b").smoke
+    inp = plan_inputs_from_cfg(cfg, batch=16, seq=64, num_stages=2)
+    assert inp.num_stages == 2
+    assert inp.stage_bwd_s == pytest.approx(2 * inp.stage_fwd_s)
+    assert inp.link_s > 0 and inp.hop_overhead_s > 0
+    assert inp.k_cap == 16                        # min(batch, 64)
+    assert inp.num_layers == cfg.num_layers
+    plan = choose_plan(inp)                       # always plannable
+    assert 1 <= plan.k <= inp.k_cap
+
+
+def test_unpipelined_record_needs_hints():
+    rec = fixture_record()
+    rec["pipeline_k"] = 0
+    rec.pop("planner_hints")
+    with pytest.raises(ValueError, match="collective-permute"):
+        plan_inputs_from_record(rec)
+    rec["planner_hints"] = {"act_hop_bytes": 31e6}
+    inp = plan_inputs_from_record(rec)
+    assert inp.link_s == pytest.approx(0.01)
+
+
+def test_cli_writes_plan_json(tmp_path):
+    from repro.analysis.autotune import main
+    out = tmp_path / "plan.json"
+    plan = main(["--roofline", FIXTURE, "--out", str(out)])
+    assert isinstance(plan, AutoPlan)
+    doc = json.loads(out.read_text())
+    assert doc["plan"]["k"] == GOLD_K
+    assert doc["plan"]["v"] == GOLD_V
+    assert doc["record"]["arch"] == "qwen1.5-4b"
+    # load_record reads both bare-JSON and JSONL forms
+    jl = tmp_path / "records.jsonl"
+    with open(jl, "w") as f:
+        f.write(json.dumps({"skip": "reason"}) + "\n")
+        f.write(json.dumps(fixture_record()) + "\n")
+    rec = load_record(str(jl))
+    assert rec["arch"] == "qwen1.5-4b"
+
+
+def test_pipeline_spec_auto_plan():
+    from repro.parallel.pipeline import PipelineSpec
+    spec, plan = PipelineSpec.auto_plan(fixture_record())
+    assert (spec.num_stages, spec.microbatches, spec.virtual_stages) == \
+        (2, GOLD_K, GOLD_V)
+    assert plan.to_dict()["k"] == GOLD_K
+    spec2, _ = PipelineSpec.auto_plan(fixture_inputs(), k_fixed=8, v_fixed=1)
+    assert (spec2.microbatches, spec2.virtual_stages) == (8, 1)
+    spec3, _ = PipelineSpec.auto_plan(plan)
+    assert spec3 == spec
+    # pins cannot silently re-shape an already-chosen plan
+    with pytest.raises(ValueError, match="re-pin"):
+        PipelineSpec.auto_plan(plan, k_fixed=8)
+
+
+# ---------------------------------------------------------------------------
+# train.py arg resolution (the silent --pipeline-k 4 default fix).
+# ---------------------------------------------------------------------------
+
+
+def _smoke_cfg():
+    from repro.configs import get_arch
+    return get_arch("qwen1.5-4b").smoke
+
+
+def test_resolve_no_pipeline():
+    from repro.launch.train import resolve_pipeline_plan
+    spec, info = resolve_pipeline_plan(
+        pipeline_stages=0, pipeline_k=None, virtual_stages=None,
+        cfg=_smoke_cfg(), batch=16, seq=64)
+    assert spec is None and info == {"enabled": False}
+
+
+def test_resolve_flag_values_logged_as_flag():
+    from repro.launch.train import resolve_pipeline_plan
+    spec, info = resolve_pipeline_plan(
+        pipeline_stages=2, pipeline_k="4", virtual_stages="2",
+        cfg=_smoke_cfg(), batch=16, seq=64)
+    assert (spec.microbatches, spec.virtual_stages) == (4, 2)
+    assert info["k_source"] == "flag" and info["v_source"] == "flag"
+    assert info["plan"] is None                   # no planner run needed
+
+
+def test_resolve_unset_k_is_planned_not_silent_4():
+    """The old behaviour silently used k=4; now an unset k runs the
+    planner and says so."""
+    from repro.launch.train import resolve_pipeline_plan
+    spec, info = resolve_pipeline_plan(
+        pipeline_stages=2, pipeline_k=None, virtual_stages=None,
+        cfg=_smoke_cfg(), batch=16, seq=64)
+    assert info["k_source"] == "auto:default"
+    assert info["v_source"] == "default"
+    assert spec.virtual_stages == 1               # unset v stays 1
+    assert info["plan"] is not None               # planner evidence logged
+    assert spec.microbatches == info["plan"]["k"]
+
+
+def test_resolve_auto_from_fixture_roofline():
+    from repro.launch.train import resolve_pipeline_plan
+    spec, info = resolve_pipeline_plan(
+        pipeline_stages=2, pipeline_k="auto", virtual_stages="auto",
+        cfg=_smoke_cfg(), batch=26, seq=64, plan_roofline=FIXTURE)
+    assert info["k_source"] == "auto" and info["v_source"] == "auto"
+    assert 1 <= spec.microbatches <= min(26, 16)  # k_cap clamped to batch
+    # the model's real layer count overrides the fixture hint
+    assert _smoke_cfg().num_layers % (2 * spec.virtual_stages) == 0
+
+
+def test_resolve_rejects_bad_combinations():
+    from repro.launch.train import resolve_pipeline_plan
+    with pytest.raises(SystemExit, match="pipeline-stages"):
+        resolve_pipeline_plan(pipeline_stages=0, pipeline_k="4",
+                              virtual_stages=None, cfg=_smoke_cfg(),
+                              batch=16, seq=64)
+    with pytest.raises(SystemExit, match="virtual-stages"):
+        resolve_pipeline_plan(pipeline_stages=1, pipeline_k=None,
+                              virtual_stages="2", cfg=_smoke_cfg(),
+                              batch=16, seq=64)
+    with pytest.raises(SystemExit, match="integer or 'auto'"):
+        resolve_pipeline_plan(pipeline_stages=2, pipeline_k="fast",
+                              virtual_stages=None, cfg=_smoke_cfg(),
+                              batch=16, seq=64)
+    with pytest.raises(SystemExit, match=">= 1"):
+        resolve_pipeline_plan(pipeline_stages=2, pipeline_k="0",
+                              virtual_stages=None, cfg=_smoke_cfg(),
+                              batch=16, seq=64)
+    # auto-planned k with an un-runnable pinned v: a clear SystemExit,
+    # not a reshape error deep inside jit
+    with pytest.raises(SystemExit, match="no feasible"):
+        resolve_pipeline_plan(pipeline_stages=2, pipeline_k=None,
+                              virtual_stages="3", cfg=_smoke_cfg(),
+                              batch=16, seq=64)
+
+
+def test_resolve_bad_roofline_records_exit_cleanly(tmp_path):
+    """Unreadable or unpipelined --plan-roofline records get the same
+    SystemExit treatment as every other bad flag, not a traceback."""
+    from repro.launch.train import resolve_pipeline_plan
+    with pytest.raises(SystemExit, match="plan-roofline"):
+        resolve_pipeline_plan(pipeline_stages=2, pipeline_k="auto",
+                              virtual_stages=None, cfg=_smoke_cfg(),
+                              batch=16, seq=64,
+                              plan_roofline=str(tmp_path / "missing.json"))
+    rec = fixture_record()
+    rec["pipeline_k"] = 0                 # common un-pipelined dryrun output
+    rec.pop("planner_hints")
+    bad = tmp_path / "unpipelined.json"
+    bad.write_text(json.dumps(rec))
+    with pytest.raises(SystemExit, match="collective-permute"):
+        resolve_pipeline_plan(pipeline_stages=2, pipeline_k="auto",
+                              virtual_stages=None, cfg=_smoke_cfg(),
+                              batch=16, seq=64, plan_roofline=str(bad))
+
+
+# ---------------------------------------------------------------------------
+# Property tests (deterministic via tests/_hypothesis_stub.py when the
+# real hypothesis is absent).
+# ---------------------------------------------------------------------------
+
+
+def _random_inputs(stage_ms, link_ms, ovh_us, k_cap, v_cap, layers):
+    return PlanInputs(num_stages=2,
+                      stage_fwd_s=stage_ms / 1e3,
+                      stage_bwd_s=2.0 * stage_ms / 1e3,
+                      link_s=link_ms / 1e3,
+                      hop_overhead_s=ovh_us / 1e6,
+                      k_cap=k_cap, v_cap=v_cap, num_layers=layers)
+
+
+@settings(deadline=None, max_examples=25)
+@given(stage_ms=st.integers(1, 500), link_ms=st.integers(1, 200),
+       ovh_us=st.integers(0, 5000), k_cap=st.integers(1, 24),
+       v_cap=st.integers(1, 6),
+       layers=st.sampled_from([2, 4, 6, 8, 12, 16, 24]))
+def test_property_chosen_plan_dominates_neighbors(stage_ms, link_ms, ovh_us,
+                                                  k_cap, v_cap, layers):
+    """For ANY measured roofline, the chosen (k, v) is within caps,
+    layer-divisible, never slower than the unpipelined baseline, and
+    never loses to a neighboring plan under simulate_c2p2sl."""
+    inp = _random_inputs(stage_ms, link_ms, ovh_us, k_cap, v_cap, layers)
+    plan = choose_plan(inp)
+    assert 1 <= plan.k <= k_cap
+    assert plan.v in inp.feasible_v()
+    assert layers % (2 * plan.v) == 0
+    assert plan.wall_s <= plan.baseline_s * (1 + 1e-9)
+    for k, v in neighbor_plans(inp, plan.k, plan.v):
+        ms, _ = simulate_c2p2sl(plan_task_times(inp, k, v), k,
+                                virtual_stages=v)
+        assert plan.wall_s <= ms * (1 + 1e-9), (k, v)
+
+
+@settings(deadline=None, max_examples=15)
+@given(stage_ms=st.integers(1, 500), link_ms=st.integers(1, 200),
+       ovh_us=st.integers(0, 5000), k=st.integers(1, 24),
+       v=st.sampled_from([1, 2, 4]))
+def test_property_wireless_bridge_exact(stage_ms, link_ms, ovh_us, k, v):
+    """batch_wall_time over the as_wireless export equals the planner
+    objective for every candidate, not just the chosen one."""
+    inp = _random_inputs(stage_ms, link_ms, ovh_us, 24, 4, 8)
+    assert batch_wall_time(*as_wireless(inp, k, v)) == pytest.approx(
+        plan_wall_time(inp, k, v), rel=1e-12)
+
+
+@settings(deadline=None, max_examples=15)
+@given(stage_ms=st.integers(1, 300), link_ms=st.integers(1, 100),
+       k_cap=st.integers(1, 16))
+def test_property_baseline_is_k1_v1(stage_ms, link_ms, k_cap):
+    inp = _random_inputs(stage_ms, link_ms, 100, k_cap, 4, 8)
+    plan = choose_plan(inp)
+    assert plan.baseline_s == pytest.approx(plan_wall_time(inp, 1, 1))
+
+
+def test_task_times_are_finite_and_positive():
+    inp = fixture_inputs()
+    t = plan_task_times(inp, 5, 2)
+    for arr in (t.ue_fwd, t.uplink, t.downlink, t.ue_bwd):
+        assert np.all(np.isfinite(arr)) and np.all(arr > 0)
+    assert t.bs_fwd > 0 and t.bs_bwd > 0

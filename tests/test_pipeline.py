@@ -223,6 +223,60 @@ def test_interleaved_four_stages_v2():
 
 
 @pytest.mark.slow
+def test_planner_chosen_plan_matches_reference():
+    """Grad equivalence for an AUTO-picked plan: (S, k, v) comes from the
+    checked-in roofline fixture via the auto-planner (the path train.py
+    --pipeline-k auto --virtual-stages auto takes), not from hand flags —
+    guarding the planner-to-pipeline plumbing the way the tests above
+    guard hand-picked plans.  The fixture's interior optimum is a plan no
+    hand-tuner would pick (k=13, v=2: ragged, interleaved)."""
+    import json as _json
+
+    from repro.analysis.autotune import plan_inputs_from_record
+    from repro.parallel.pipeline import PipelineSpec
+
+    fixture = os.path.join(os.path.dirname(__file__), "fixtures",
+                           "roofline_smoke.json")
+    with open(fixture) as f:
+        record = _json.load(f)
+    spec, plan = PipelineSpec.auto_plan(plan_inputs_from_record(record))
+    assert spec.num_stages == 2 and spec.virtual_stages > 1
+    assert spec.microbatches not in (1, 2, 4, 8, 16)   # not a hand pick
+    out = run_sub(f"""
+        import jax, json
+        import jax.numpy as jnp
+        from repro.models import LM, LMConfig
+        from repro.data import lm_batch_for
+        from repro.parallel.compat import make_mesh, mesh_context
+        from repro.parallel.pipeline import PipelineSpec, make_pipelined_loss
+
+        cfg = LMConfig(name='t', num_layers=8, d_model=32, n_heads=4, n_kv=2,
+                       d_ff=64, vocab=128, dtype='float32')
+        m = LM(cfg)
+        p = m.init(jax.random.key(1))
+        batch = lm_batch_for(cfg, 26, 16)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        loss_ref, _ = m.forward(p, batch)
+        g_ref = jax.grad(lambda p: m.forward(p, batch)[0])(p)
+        spec = PipelineSpec(num_stages={spec.num_stages},
+                            microbatches={spec.microbatches},
+                            virtual_stages={spec.virtual_stages})
+        loss_fn = make_pipelined_loss(m, spec, mesh=mesh)
+        with mesh_context(mesh):
+            loss_pipe, _ = jax.jit(loss_fn)(p, batch)
+            g_pipe = jax.jit(jax.grad(lambda p: loss_fn(p, batch)[0]))(p)
+        d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         g_ref, g_pipe)
+        print(json.dumps({{"loss_ref": float(loss_ref),
+                           "loss_pipe": float(loss_pipe),
+                           "gdiff": max(jax.tree.leaves(d))}}))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert abs(res["loss_ref"] - res["loss_pipe"]) < 1e-6
+    assert res["gdiff"] < 1e-7
+
+
+@pytest.mark.slow
 def test_data_parallel_grads_match_single_device():
     """GSPMD DP run == single-device run for the same global batch."""
     out = run_sub("""

@@ -160,6 +160,24 @@ def test_makespan_lower_bound_property(n, l, k, seed):
             assert e >= s - 1e-12
 
 
+@settings(deadline=None, max_examples=25)
+@given(n=st.integers(2, 8), l=st.integers(1, 5), k=st.integers(1, 31),
+       v=st.integers(1, 7), seed=st.integers(0, 100))
+def test_property_bubble_rate_monotone_in_k_and_v(n, l, k, v, seed):
+    """Property (eqs 16-18 generalized): at fixed task times, BR is
+    non-increasing in both k (more steady-state work amortizing the same
+    idle) and v (the idle term divides by v), and stays in [0, 1)."""
+    prof = resnet18_profile()
+    fleet = sample_fleet(n, seed=seed)
+    b = np.full(n, 64.0)
+    tau = np.full(n, fleet.channel.frame_s / n)
+    t = task_times(prof, fleet, Plan(l=l, k=k, b=b, tau=tau))
+    br = bubble_rate(t, k, v)
+    assert 0.0 <= br < 1.0
+    assert bubble_rate(t, k + 1, v) <= br + 1e-12
+    assert bubble_rate(t, k, v + 1) <= br + 1e-12
+
+
 @settings(deadline=None, max_examples=20)
 @given(k=st.integers(2, 32), seed=st.integers(0, 50))
 def test_more_microbatches_never_hurt_when_steady(k, seed):
