@@ -14,13 +14,14 @@ import os
 
 
 def run_cell(arch, shape, multi=False, *, pipeline_k=0, pipeline_v=1,
+             wire_dtype="none",
              cast_gathers=False, seq_shard=None, microbatches=1,
              master_fp32=False, pure_dp=False, tpu_model=False, top_n=10):
     from repro.launch.dryrun import lower_cell
     from repro.analysis.hlo_costs import analyze
     from repro.analysis.roofline import RooflineTerms
     rec, comp = lower_cell(arch, shape, multi, pipeline_k=pipeline_k,
-                           pipeline_v=pipeline_v,
+                           pipeline_v=pipeline_v, wire_dtype=wire_dtype,
                            cast_gathers=cast_gathers, seq_shard=seq_shard,
                            microbatches=microbatches, master_fp32=master_fp32,
                            pure_dp=pure_dp)
@@ -40,23 +41,28 @@ def run_cell(arch, shape, multi=False, *, pipeline_k=0, pipeline_v=1,
 def auto_plan_compare(rec, *, num_layers=None):
     """Hand-picked vs auto-picked plan for one lowered cell.
 
-    Runs the roofline planner on the record and evaluates BOTH plans
-    under the same ``plan_wall_time`` model, so the comparison is
-    apples-to-apples without re-lowering.  Returns the dict stored under
+    Runs the codec-aware roofline planner on the record and evaluates
+    BOTH plans under the same ``plan_wall_time`` model, so the comparison
+    is apples-to-apples without re-lowering: the hand plan is billed with
+    the codec the cell was actually compiled with, the auto plan may pick
+    a different (k, v, wire).  Returns the dict stored under
     ``rec['auto_plan_compare']``.
     """
-    from repro.analysis.autotune import (choose_plan, plan_inputs_from_record,
+    from repro.analysis.autotune import (WIRE_AUTO, choose_plan,
+                                         plan_inputs_from_record,
                                          plan_wall_time)
     # num_stages comes from the record's own pod mesh axis; raises
     # ValueError on single-pod records (callers validate flags up front
     # so this never fires after an expensive compile)
     inp = plan_inputs_from_record(rec, num_layers=num_layers)
-    plan = choose_plan(inp)
+    plan = choose_plan(inp, wire_candidates=list(WIRE_AUTO))
     hand_k = int(rec.get("pipeline_k", 0) or 1)
     hand_v = int(rec.get("pipeline_v", 1) or 1)
-    hand_wall = plan_wall_time(inp, hand_k, hand_v)
+    hand_wire = rec.get("wire_dtype", "none") or "none"
+    hand_wall = plan_wall_time(inp.with_wire(hand_wire), hand_k, hand_v)
     return {
-        "hand": {"k": hand_k, "v": hand_v, "wall_s": hand_wall},
+        "hand": {"k": hand_k, "v": hand_v, "wire": hand_wire,
+                 "wall_s": hand_wall},
         "auto": plan.to_dict(),
         "auto_vs_hand": hand_wall / plan.wall_s if plan.wall_s > 0 else 1.0,
     }
@@ -91,6 +97,10 @@ def main():
     ap.add_argument("--pipeline-k", type=int, default=0)
     ap.add_argument("--pipeline-v", type=int, default=1,
                     help="interleaved virtual stages per pipeline stage")
+    ap.add_argument("--wire-dtype", default="none",
+                    choices=["none", "int8", "fp8"],
+                    help="wire codec on the pipeline hop "
+                         "(parallel/wire.py)")
     ap.add_argument("--pipeline-auto", action="store_true",
                     help="run the roofline auto-planner on the lowered "
                          "cell and record hand-picked vs auto-picked "
@@ -125,6 +135,7 @@ def main():
     rec, prof = run_cell(args.arch, args.shape, args.mesh == "multi",
                          pipeline_k=args.pipeline_k,
                          pipeline_v=args.pipeline_v,
+                         wire_dtype=args.wire_dtype,
                          cast_gathers=args.cast_gathers, seq_shard=seq,
                          microbatches=args.microbatches,
                          master_fp32=args.master_fp32,
@@ -143,15 +154,18 @@ def main():
         else:
             rec["auto_plan_compare"] = cmp
             a = cmp["auto"]
-            print(f"  auto plan: k={a['k']} v={a['v']}  "
+            print(f"  auto plan: k={a['k']} v={a['v']} "
+                  f"wire={a.get('wire_dtype', 'none')}  "
                   f"{a['wall_s'] * 1e3:.2f} ms/batch vs hand "
                   f"k={cmp['hand']['k']} v={cmp['hand']['v']} "
+                  f"wire={cmp['hand']['wire']} "
                   f"{cmp['hand']['wall_s'] * 1e3:.2f} ms "
                   f"({cmp['auto_vs_hand']:.2f}x)")
     rec["label"] = args.label
     rec["knobs"] = {"cast_gathers": args.cast_gathers, "seq_shard": seq,
                     "pipeline_k": args.pipeline_k,
                     "pipeline_v": args.pipeline_v,
+                    "wire_dtype": args.wire_dtype,
                     "pipeline_auto": args.pipeline_auto,
                     "microbatches": args.microbatches,
                     "master_fp32": args.master_fp32,

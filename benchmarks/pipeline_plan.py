@@ -1,0 +1,59 @@
+"""Pipeline-plan bench: the codec-aware planner trajectory on the
+checked-in roofline fixture.
+
+This is the same measurement -> (S, k, v, wire) path ``perf_iter.py
+--pipeline-auto`` and ``dryrun.py`` attach to freshly-compiled cells
+(``autotune.plan_inputs_from_record`` + ``wire_plan_sweep``), run on
+``tests/fixtures/roofline_smoke.json`` so it is deterministic and
+compile-free — which is what lets CI diff every run against the committed
+``benchmarks/BENCH_pipeline.json`` baseline (``benchmarks/run.py --diff``)
+and catch any silent drift in the planner objective, the codec byte
+model, or the extraction math.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "..", "tests",
+                       "fixtures", "roofline_smoke.json")
+
+
+def main(quick: bool = True):
+    from repro.analysis.autotune import (WIRE_AUTO, plan_inputs_from_record,
+                                         wire_plan_sweep)
+    with open(FIXTURE) as f:
+        record = json.load(f)
+    inp = plan_inputs_from_record(record)
+    res = wire_plan_sweep(inp, wire_candidates=WIRE_AUTO)
+    chosen, sweep = res["chosen"], res["sweep"]
+
+    none_link = sweep["none"]["wire_link_s"]
+    out = {
+        "cells": len(sweep),
+        "chosen_wire": chosen["wire_dtype"],
+        "chosen_k": chosen["k"],
+        "chosen_v": chosen["v"],
+        "chosen_wall_ms": chosen["wall_s"] * 1e3,
+        "speedup_vs_unpipelined": chosen["speedup"],
+        "bubble": chosen["bubble"],
+        "link_shrink_int8": none_link / sweep["int8"]["wire_link_s"],
+        "link_shrink_fp8": none_link / sweep["fp8"]["wire_link_s"],
+        "wall_ms_by_wire": {w: row["wall_s"] * 1e3
+                            for w, row in sweep.items()},
+        "plan_by_wire": {w: (row["k"], row["v"])
+                         for w, row in sweep.items()},
+    }
+    for w, row in sweep.items():
+        print(f"  wire={w:5s} k={row['k']:3d} v={row['v']} "
+              f"link {row['wire_link_s'] * 1e3:7.3f} ms "
+              f"wall {row['wall_s'] * 1e3:8.3f} ms "
+              f"({row['speedup_vs_none']:.4f}x vs uncoded)")
+    print(f"  chosen: wire={out['chosen_wire']} k={out['chosen_k']} "
+          f"v={out['chosen_v']}  int8 link shrink "
+          f"{out['link_shrink_int8']:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

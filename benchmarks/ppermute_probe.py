@@ -1,0 +1,140 @@
+"""Measured ppermute microbenchmark -> planner hints.
+
+The auto-planner's ``hop_overhead_s`` (per-micro-batch message cost of one
+inter-stage hop) defaulted to the ``HW["dcn_latency_s"]`` constant; this
+probe MEASURES it on the machine it runs on, by timing a jitted shard_map
+``ppermute`` over a 2-wide 'pod' axis at several payload sizes and fitting
+
+    t(bytes) = hop_overhead_s + bytes / link_bw_Bps
+
+with least squares.  The output JSON carries a ``planner_hints`` dict in
+exactly the shape ``autotune.plan_inputs_from_record`` consumes:
+
+    PYTHONPATH=src python -m benchmarks.ppermute_probe \
+        --out results/ppermute_probe.json
+    PYTHONPATH=src python -m repro.launch.train ... \
+        --pipeline-k auto --plan-hints results/ppermute_probe.json
+    PYTHONPATH=src python -m repro.analysis.autotune \
+        --roofline ... --hints results/ppermute_probe.json
+
+Caveat (printed into the record): on a CPU host with forced devices the
+"link" is loopback shared memory — useful for closing the plumbing and for
+single-host pods, but the production calibration should run on the real
+multi-pod slice, where the same command measures the actual DCN hop.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def fit_overhead(points):
+    """[(bytes, seconds), ...] -> (hop_overhead_s, link_bw_Bps).
+
+    Ordinary least squares on t = a + b * bytes; the intercept is clamped
+    at >= 0 (timer noise can drive it slightly negative on fast links)
+    and a non-positive slope degenerates to an effectively infinite
+    bandwidth (1e15 B/s) rather than a nonsensical negative one.
+    """
+    import numpy as np
+    pts = np.asarray(points, dtype=np.float64)
+    if pts.ndim != 2 or pts.shape[0] < 2:
+        raise ValueError("need at least two (bytes, seconds) points to fit")
+    x, y = pts[:, 0], pts[:, 1]
+    a_mat = np.stack([np.ones_like(x), x], axis=1)
+    (a, b), *_ = np.linalg.lstsq(a_mat, y, rcond=None)
+    overhead = float(max(a, 0.0))
+    bw = float(1.0 / b) if b > 0 else 1e15
+    return overhead, bw
+
+
+def _time_call(fn, x, repeats: int) -> float:
+    """Best-of-N wall seconds of one jitted hop (min filters scheduler
+    noise, the standard microbenchmark estimator)."""
+    import jax
+    jax.block_until_ready(fn(x))       # compile + warm cache
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="measure ppermute hop overhead + bandwidth -> "
+                    "planner hints JSON")
+    ap.add_argument("--devices", type=int, default=2,
+                    help="pod-axis width; forced as host devices when the "
+                         "process has fewer (must be set before jax init)")
+    ap.add_argument("--sizes-kib", default="64,256,1024,4096,16384",
+                    help="comma-separated per-device payload sizes (KiB)")
+    ap.add_argument("--repeats", type=int, default=20)
+    ap.add_argument("--out", default="results/ppermute_probe.json")
+    args = ap.parse_args(argv)
+
+    if "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+    import jax
+    import jax.numpy as jnp
+
+    from repro.parallel import compat
+    from repro.parallel.compat import PartitionSpec as P
+
+    n = min(args.devices, len(jax.devices()))
+    if n < 2:
+        raise SystemExit(
+            f"ppermute probe needs >= 2 devices, have {len(jax.devices())} "
+            "(run the module fresh so it can set XLA_FLAGS, or run on a "
+            "real slice)")
+    mesh = compat.make_mesh((n,), ("pod",))
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def hop(x):
+        return jax.lax.ppermute(x, "pod", perm)
+
+    fn = jax.jit(compat.shard_map(hop, mesh, in_specs=(P("pod"),),
+                                  out_specs=P("pod"), check=False))
+
+    points = []
+    sizes = [int(s) for s in args.sizes_kib.split(",") if s.strip()]
+    for kib in sizes:
+        elems = max(1, kib * 1024 // 2)            # bf16 payload
+        x = jnp.zeros((n, elems), jnp.bfloat16)
+        t = _time_call(fn, x, args.repeats)
+        nbytes = elems * 2                          # per-device hop bytes
+        points.append([nbytes, t])
+        print(f"  {nbytes / 2 ** 20:8.2f} MiB/device  {t * 1e6:10.1f} us")
+
+    overhead, bw = fit_overhead(points)
+    doc = {
+        "kind": "ppermute_probe",
+        "backend": jax.default_backend(),
+        "devices": n,
+        "jax": jax.__version__,
+        "points_bytes_seconds": points,
+        "note": ("loopback measurement when backend=cpu with forced host "
+                 "devices; calibrate on the real multi-pod slice for "
+                 "production hints"),
+        "planner_hints": {
+            "hop_overhead_s": overhead,
+            "link_bw_Bps": bw,
+        },
+    }
+    print(f"fit: hop_overhead_s={overhead:.3e}  "
+          f"link_bw={bw / 1e9:.2f} GB/s  "
+          f"(HW constants: dcn_latency 2.5e-05, dcn_bw 3.10 GB/s)")
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {args.out} — feed it to train.py --plan-hints or "
+          "autotune --hints")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

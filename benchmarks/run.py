@@ -2,9 +2,15 @@
 
 Prints ``name,seconds,derived`` CSV rows.  ``--full`` uses the paper-scale
 seeds/steps; the default quick mode keeps the whole suite CPU-friendly.
-``--only a,b`` restricts to a subset (the CI smoke job runs the two
+``--only a,b`` restricts to a subset (the CI smoke job runs the
 schedule-level benches) and ``--json-out`` writes the timing rows as JSON
 so the ``BENCH_*.json`` trajectory can accumulate across CI runs.
+
+``--diff BASELINE.json`` compares this run's result dicts against a
+committed baseline (``benchmarks/BENCH_pipeline.json``) for every bench
+present in both, within ``--diff-rtol``; a mismatch exits non-zero, so the
+CI bench-smoke job catches silent drift in deterministic benches.  Timing
+(``seconds``) is never diffed — only results.
 """
 from __future__ import annotations
 
@@ -12,6 +18,48 @@ import argparse
 import json
 import platform
 import time
+
+
+def _diff_values(path, base, new, rtol, failures):
+    """Recursive numeric/structural compare; appends mismatch strings."""
+    if isinstance(base, dict) and isinstance(new, dict):
+        for key in sorted(set(base) | set(new)):
+            if key not in base or key not in new:
+                failures.append(f"{path}.{key}: "
+                                f"{'missing in new run' if key in base else 'not in baseline'}")
+                continue
+            _diff_values(f"{path}.{key}", base[key], new[key], rtol,
+                         failures)
+        return
+    if isinstance(base, (list, tuple)) and isinstance(new, (list, tuple)):
+        if len(base) != len(new):
+            failures.append(f"{path}: length {len(base)} != {len(new)}")
+            return
+        for i, (b, n) in enumerate(zip(base, new)):
+            _diff_values(f"{path}[{i}]", b, n, rtol, failures)
+        return
+    if isinstance(base, bool) or isinstance(new, bool) \
+            or not isinstance(base, (int, float)) \
+            or not isinstance(new, (int, float)):
+        if base != new:
+            failures.append(f"{path}: {base!r} != {new!r}")
+        return
+    tol = rtol * max(abs(base), abs(new), 1e-12)
+    if abs(base - new) > tol:
+        failures.append(f"{path}: {base} != {new} (rtol {rtol})")
+
+
+def diff_rows(base_rows, new_rows, rtol=1e-6):
+    """Compare bench result dicts for benches present in BOTH row lists;
+    returns a list of mismatch descriptions (empty = clean)."""
+    base = {r["name"]: r.get("result") for r in base_rows}
+    new = {r["name"]: r.get("result") for r in new_rows}
+    failures = []
+    for name in sorted(set(base) & set(new)):
+        if base[name] is None or new[name] is None:
+            continue
+        _diff_values(name, base[name], new[name], rtol, failures)
+    return failures
 
 
 def main(argv=None):
@@ -22,11 +70,16 @@ def main(argv=None):
                          "(default: all)")
     ap.add_argument("--json-out", default=None,
                     help="write timing rows to this JSON file")
+    ap.add_argument("--diff", default=None,
+                    help="baseline BENCH_*.json to compare results "
+                         "against (benches present in both; non-zero "
+                         "exit on mismatch)")
+    ap.add_argument("--diff-rtol", type=float, default=1e-6)
     args = ap.parse_args(argv)
     quick = not args.full
 
     from benchmarks import (ao_convergence, fig3_accuracy, fig4_ue_scaling,
-                            fig5_bandwidth, roofline_report)
+                            fig5_bandwidth, pipeline_plan, roofline_report)
 
     benches = {
         "fig4_ue_scaling": fig4_ue_scaling.main,
@@ -34,6 +87,7 @@ def main(argv=None):
         "ao_convergence": ao_convergence.main,
         "fig3_accuracy": fig3_accuracy.main,
         "roofline_report": roofline_report.main,
+        "pipeline_plan": pipeline_plan.main,
     }
     selected = list(benches)
     if args.only:
@@ -85,6 +139,34 @@ def main(argv=None):
                       default=lambda o: o.tolist()
                       if hasattr(o, "tolist") else str(o))
         print(f"wrote {args.json_out}")
+
+    if args.diff:
+        with open(args.diff) as f:
+            base = json.load(f)
+        # normalize this run's rows through the same JSON encoding the
+        # baseline went through (tuples -> lists, numpy -> python)
+        new_rows = json.loads(json.dumps(
+            json_rows, default=lambda o: o.tolist()
+            if hasattr(o, "tolist") else str(o)))
+        failures = diff_rows(base.get("rows", []), new_rows,
+                             rtol=args.diff_rtol)
+        shared = sorted({r["name"] for r in base.get("rows", [])
+                         if isinstance(r.get("result"), dict)}
+                        & {r["name"] for r in new_rows
+                           if isinstance(r.get("result"), dict)})
+        if not shared:
+            # a drift gate that matched nothing is a broken gate, not a
+            # passing one (renamed bench, --only drift, non-dict result)
+            print(f"bench diff vs {args.diff} FAILED: no overlapping "
+                  "bench results to compare — the gate would be a no-op")
+            raise SystemExit(1)
+        if failures:
+            print(f"bench diff vs {args.diff} FAILED "
+                  f"({len(failures)} mismatches):")
+            for fmsg in failures:
+                print(f"  {fmsg}")
+            raise SystemExit(1)
+        print(f"bench diff vs {args.diff} OK ({', '.join(shared)})")
 
 
 if __name__ == "__main__":

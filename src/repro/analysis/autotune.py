@@ -1,4 +1,4 @@
-"""Roofline-driven auto-planner: choose ``(pipeline_stages, k, v)``.
+"""Roofline-driven auto-planner: choose ``(pipeline_stages, k, v[, wire])``.
 
 Closes the loop from measurement to execution (ROADMAP auto-tuning items):
 
@@ -26,6 +26,13 @@ the same candidate as a (profile, fleet, plan) triple so
 returns the argmin, so the chosen plan beats-or-ties every neighboring
 ``(k±1, v/2, 2v)`` plan by construction — the property the test suite
 locks in (tests/test_autotune.py).
+
+The planner is also **codec-aware**: the pipeline hop can ship the cut
+activation block-quantized (``parallel/wire.py``), and the wire byte
+model here (``wire_bytes_per_element`` / ``PlanInputs.wire_link_s``)
+scales the billed link time accordingly; ``choose_plan(...,
+wire_candidates=WIRE_AUTO)`` enumerates the codec jointly with (k, v)
+since a 2-4x smaller ``link_s`` moves the argmin.
 
 Everything here is jax-free (numpy + the scipy that repro.core already
 depends on; no jax import): the planner must run in the CI planner-smoke
@@ -70,6 +77,67 @@ def hop_ratio(num_stages: int, virtual_stages: int) -> float:
     return (num_stages * virtual_stages - 1.0) / (num_stages - 1.0)
 
 
+# ---------------------------------------------------------------------------
+# Wire-codec byte model (mirror of parallel/wire.py, kept numpy-only: the
+# planner must run in CI before any accelerator stack exists).
+# ---------------------------------------------------------------------------
+
+# Codec enumeration order for ``wire_dtype='auto'``: ties keep the first
+# entry, so an uncoded hop wins unless quantizing strictly pays, and int8
+# (better-conditioned with block scales) wins a tie against fp8.
+WIRE_AUTO = ("none", "int8", "fp8")
+
+# Nominal quantization block (parallel/wire.py picks the largest divisor
+# of d_model <= this); the fp32 per-block scale amortizes to 4/block
+# bytes per element on the wire.
+WIRE_BLOCK = 256
+
+
+def wire_block_for(d_model, block: int = WIRE_BLOCK) -> int:
+    """Effective codec block for a model width — mirror of
+    ``parallel.wire.wire_block`` (kept numpy-only; that module imports
+    jax): the largest divisor of ``d_model`` that is <= ``block``.
+    Unknown ``d_model`` assumes the nominal block."""
+    if d_model is None or int(d_model) <= 0:
+        return block
+    d = int(d_model)
+    b = min(block, d)
+    while d % b:
+        b -= 1
+    return b
+
+
+def wire_bytes_per_element(wire_dtype: str, act_bytes: float,
+                           block: int = WIRE_BLOCK) -> float:
+    """Wire bytes one activation element costs under a codec.
+
+    ``act_bytes`` is the uncompressed element width (2 for bf16, 4 for
+    fp32 — what the raw ppermute ships).  Both quantized codecs put one
+    byte per element plus the per-block fp32 scale on the wire;
+    ``block`` is the EFFECTIVE codec block (``wire_block_for(d_model)``
+    — a d_model not divisible by 256 pays more scale overhead, and a
+    degenerate block can make quantizing a net loss, which the planner
+    must see).
+    """
+    w = "none" if wire_dtype is None else str(wire_dtype)
+    if w == "none":
+        return float(act_bytes)
+    if w in ("int8", "fp8"):
+        return 1.0 + 4.0 / max(1, int(block))
+    raise ValueError(
+        f"unknown wire_dtype {wire_dtype!r} (expected one of "
+        f"{('none',) + ('int8', 'fp8')})")
+
+
+def wire_link_scale(wire_dtype: str, act_bytes: float,
+                    block: int = WIRE_BLOCK) -> float:
+    """Multiplier on the uncompressed link time under a codec (< 1 for
+    int8/fp8 at healthy blocks; exactly 1 for 'none'; can exceed 1 for
+    degenerate blocks, where the planner should keep 'none')."""
+    return wire_bytes_per_element(wire_dtype, act_bytes, block) \
+        / float(act_bytes)
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanInputs:
     """Measured (or estimated) costs of one pipeline cell, per batch.
@@ -77,11 +145,14 @@ class PlanInputs:
     ``stage_fwd_s`` / ``stage_bwd_s``: wall seconds for ONE stage to push
     the WHOLE batch through its layer share (forward / backward) — the
     paper's t_b^F / t_b^B transplanted to pods.  ``link_s``: seconds for
-    one full-batch cut-activation hop across the stage boundary at v=1
-    (per direction; the paper's t^U == t^D).  ``hop_overhead_s``: fixed
-    per-micro-batch-message cost of one hop (DCN latency) — the term that
-    makes large k and large v non-free and gives the planner an interior
-    optimum.
+    one UNCOMPRESSED full-batch cut-activation hop across the stage
+    boundary at v=1 (per direction; the paper's t^U == t^D).
+    ``hop_overhead_s``: fixed per-micro-batch-message cost of one hop
+    (DCN latency, or a measured value from benchmarks/ppermute_probe.py)
+    — the term that makes large k and large v non-free and gives the
+    planner an interior optimum.  ``wire_dtype`` / ``act_bytes`` model
+    the hop codec: the billed link time is ``wire_link_s`` =
+    ``link_s * wire_link_scale(wire_dtype, act_bytes)``.
     """
 
     num_stages: int
@@ -96,6 +167,16 @@ class PlanInputs:
     # wall time is S-independent (half the layers on half the chips).
     # False (single-chip-per-stage estimates): stage time = total / S.
     fixed_chip_budget: bool = True
+    wire_dtype: str = "none"     # hop codec billed by the objective
+    act_bytes: float = 2.0       # uncompressed element width (bf16 default)
+    wire_block: int = WIRE_BLOCK  # effective codec block (wire_block_for)
+
+    @property
+    def wire_link_s(self) -> float:
+        """Link seconds of one full-batch hop as billed under the codec."""
+        return self.link_s * wire_link_scale(self.wire_dtype,
+                                             self.act_bytes,
+                                             self.wire_block)
 
     def with_stages(self, num_stages: int) -> "PlanInputs":
         if num_stages == self.num_stages:
@@ -106,6 +187,13 @@ class PlanInputs:
             self, num_stages=num_stages,
             stage_fwd_s=self.stage_fwd_s * scale,
             stage_bwd_s=self.stage_bwd_s * scale)
+
+    def with_wire(self, wire_dtype: str) -> "PlanInputs":
+        wire_bytes_per_element(wire_dtype, self.act_bytes)  # validate
+        w = "none" if wire_dtype is None else str(wire_dtype)
+        if w == self.wire_dtype:
+            return self
+        return dataclasses.replace(self, wire_dtype=w)
 
     def feasible_v(self) -> list:
         """Interleave counts admissible under the layer-divisibility
@@ -124,6 +212,10 @@ class PlanInputs:
             "stage_fwd_s": self.stage_fwd_s,
             "stage_bwd_s": self.stage_bwd_s,
             "link_s": self.link_s,
+            "wire_dtype": self.wire_dtype,
+            "act_bytes": self.act_bytes,
+            "wire_block": self.wire_block,
+            "wire_link_s": self.wire_link_s,
             "hop_overhead_s": self.hop_overhead_s,
             "k_cap": self.k_cap,
             "v_cap": self.v_cap,
@@ -137,11 +229,11 @@ def plan_task_times(inp: PlanInputs, k: int, v: int) -> TaskTimes:
 
     The uplink/downlink legs carry the v-interleave hop inflation: a
     micro-batch crosses the boundary ``S*v - 1`` times instead of
-    ``S - 1``, each hop paying bandwidth (volume / k) plus the fixed
-    per-message overhead.
+    ``S - 1``, each hop paying bandwidth (codec-billed volume / k) plus
+    the fixed per-message overhead.
     """
     h = hop_ratio(inp.num_stages, v)
-    leg = h * (inp.link_s / k + inp.hop_overhead_s)
+    leg = h * (inp.wire_link_s / k + inp.hop_overhead_s)
     return TaskTimes(
         ue_fwd=np.array([inp.stage_fwd_s / k]),
         uplink=np.array([leg]),
@@ -169,7 +261,7 @@ def as_wireless(inp: PlanInputs, k: int, v: int):
             f"num_stages={inp.num_stages}")
     B = float(max(k, 1))
     h = hop_ratio(2, v)
-    cut_bytes = h * (inp.link_s + k * inp.hop_overhead_s) / (8.0 * B)
+    cut_bytes = h * (inp.wire_link_s + k * inp.hop_overhead_s) / (8.0 * B)
     profile = LayerProfile(
         name="pod-roofline",
         layer_names=("ue_stage", "bs_stage"),
@@ -216,8 +308,8 @@ def tick_wall_time(inp: PlanInputs, k: int, v: int) -> float:
     (XLA latency hiding), per direction.  Used as the objective when
     S != 2 (where the 2-actor simulator is not the true topology)."""
     ticks = schedule_ticks(k, inp.num_stages, v)
-    comm = (inp.link_s / k + inp.hop_overhead_s) if inp.num_stages > 1 \
-        else 0.0
+    comm = (inp.wire_link_s / k + inp.hop_overhead_s) \
+        if inp.num_stages > 1 else 0.0
     comp_f = inp.stage_fwd_s / (k * v)
     comp_b = inp.stage_bwd_s / (k * v)
     return ticks * (max(comp_f, comm) + max(comp_b, comm))
@@ -258,6 +350,7 @@ class AutoPlan:
     baseline_s: float      # modeled batch time at (S, 1, 1) — no pipelining
     bubble: float
     inputs: PlanInputs
+    wire_dtype: str = "none"   # hop codec the chosen plan is billed with
 
     @property
     def speedup(self) -> float:
@@ -268,6 +361,7 @@ class AutoPlan:
             "num_stages": self.num_stages,
             "k": self.k,
             "v": self.v,
+            "wire_dtype": self.wire_dtype,
             "wall_s": self.wall_s,
             "baseline_s": self.baseline_s,
             "speedup": self.speedup,
@@ -298,19 +392,23 @@ def neighbor_plans(inp: PlanInputs, k: int, v: int) -> list:
 
 def choose_plan(inp: PlanInputs, *, stage_candidates=None,
                 k_fixed: int | None = None,
-                v_fixed: int | None = None) -> AutoPlan:
+                v_fixed: int | None = None,
+                wire_candidates=None) -> AutoPlan:
     """Exhaustive argmin of ``plan_wall_time`` over the feasible grid.
 
     ``stage_candidates`` extends the search to the joint (S, k, v) trade;
     by default S is pinned (the pod axis size is a hardware fact).
-    ``k_fixed`` / ``v_fixed`` pin one coordinate (a hand flag overriding
-    half of an auto plan); pins are validated for positivity and for the
-    layer-divisibility the schedule requires, but deliberately NOT
-    clamped to ``k_cap`` — a hand k beyond the planner's cap is a
-    legitimate override (the pipeline pads ragged batches).
-    Deterministic: ties
-    (equal wall time within tolerance) keep the first-enumerated
-    candidate — smallest S, then smallest v, then smallest k.
+    ``wire_candidates`` extends it to the hop codec (e.g. ``WIRE_AUTO``)
+    — a 2-4x smaller ``link_s`` moves the (S, k, v) argmin, so the codec
+    is enumerated jointly rather than bolted on after; by default the
+    codec is pinned to ``inp.wire_dtype``.  ``k_fixed`` / ``v_fixed``
+    pin one coordinate (a hand flag overriding half of an auto plan);
+    pins are validated for positivity and for the layer-divisibility the
+    schedule requires, but deliberately NOT clamped to ``k_cap`` — a
+    hand k beyond the planner's cap is a legitimate override (the
+    pipeline pads ragged batches).  Deterministic: ties (equal wall time
+    within tolerance) keep the first-enumerated candidate — smallest S,
+    then the earlier wire candidate, then smallest v, then smallest k.
     """
     if k_fixed is not None and k_fixed < 1:
         raise ValueError(f"k={k_fixed} must be >= 1")
@@ -318,6 +416,10 @@ def choose_plan(inp: PlanInputs, *, stage_candidates=None,
         raise ValueError(f"virtual_stages={v_fixed} must be >= 1")
     stages = list(stage_candidates) if stage_candidates \
         else [inp.num_stages]
+    wires = list(wire_candidates) if wire_candidates \
+        else [inp.wire_dtype]
+    for w_cand in wires:
+        wire_bytes_per_element(w_cand, inp.act_bytes)   # validate early
     best = None
     for S in sorted(stages):
         if S < 1:
@@ -335,26 +437,77 @@ def choose_plan(inp: PlanInputs, *, stage_candidates=None,
             vs = inp_s.feasible_v()
         ks = [k_fixed] if k_fixed is not None \
             else range(1, max(1, inp_s.k_cap) + 1)
-        for v in vs:
-            for k in ks:
-                w = plan_wall_time(inp_s, k, v)
-                if best is None or w < best[0] * (1.0 - _TIE_RTOL):
-                    best = (w, k, v, S, inp_s)
+        for wd in wires:
+            inp_sw = inp_s.with_wire(wd)
+            for v in vs:
+                for k in ks:
+                    w = plan_wall_time(inp_sw, k, v)
+                    if best is None or w < best[0] * (1.0 - _TIE_RTOL):
+                        best = (w, k, v, S, inp_sw)
     if best is None:
         raise ValueError(
             f"no feasible (S, k, v): stages {stages}"
             + (f" x v={v_fixed}" if v_fixed is not None else "")
             + f" incompatible with num_layers={inp.num_layers} "
             "(the pipeline needs S*v dividing the layer count)")
-    w, k, v, S, inp_s = best
+    w, k, v, S, inp_sw = best
     return AutoPlan(num_stages=S, k=k, v=v, wall_s=w,
-                    baseline_s=plan_wall_time(inp_s, 1, 1),
-                    bubble=plan_bubble(inp_s, k, v), inputs=inp_s)
+                    baseline_s=plan_wall_time(inp_sw, 1, 1),
+                    bubble=plan_bubble(inp_sw, k, v), inputs=inp_sw,
+                    wire_dtype=inp_sw.wire_dtype)
+
+
+def wire_plan_sweep(inp: PlanInputs, wire_candidates=WIRE_AUTO,
+                    **choose_kwargs) -> dict:
+    """Per-codec best plans plus the joint winner — the evidence trail a
+    dry-run record stores so ``auto_plan`` shows which codec won and why.
+
+    Returns ``{"chosen": AutoPlan dict, "sweep": {codec: {k, v, wall_s,
+    wire_link_s, speedup_vs_none}}}``; ``speedup_vs_none`` is each
+    codec's best wall time relative to the uncoded best.
+    """
+    sweep = {}
+    for wd in wire_candidates:
+        p = choose_plan(inp.with_wire(wd), **choose_kwargs)
+        sweep[wd] = {"k": p.k, "v": p.v, "wall_s": p.wall_s,
+                     "wire_link_s": p.inputs.wire_link_s}
+    none_wall = sweep.get("none", {}).get("wall_s")
+    for row in sweep.values():
+        row["speedup_vs_none"] = (none_wall / row["wall_s"]
+                                  if none_wall and row["wall_s"] > 0
+                                  else 1.0)
+    chosen = choose_plan(inp, wire_candidates=list(wire_candidates),
+                         **choose_kwargs)
+    return {"chosen": chosen.to_dict(), "sweep": sweep}
 
 
 # ---------------------------------------------------------------------------
 # Extraction: dry-run record / model config -> PlanInputs.
 # ---------------------------------------------------------------------------
+
+
+# Element widths for the dtype strings dryrun records carry.  Resolved
+# WITHOUT np.dtype: this module stays jax-free, and plain numpy does not
+# understand 'bfloat16'/'float8_*' unless ml_dtypes has been imported —
+# which the planner-smoke CLI deliberately never does.
+_DTYPE_BYTES = {
+    "float64": 8.0, "float32": 4.0, "float16": 2.0, "bfloat16": 2.0,
+    "float8_e4m3fn": 1.0, "float8_e5m2": 1.0,
+}
+
+
+def _dtype_bytes(dtype_name, default: float = 2.0) -> float:
+    """Record dtype string -> element bytes (bf16 default when absent or
+    unrecognized)."""
+    if dtype_name is None:
+        return default
+    name = str(dtype_name)
+    if name in _DTYPE_BYTES:
+        return _DTYPE_BYTES[name]
+    try:
+        return float(np.dtype(name).itemsize)
+    except TypeError:
+        return default
 
 
 def _pod_stages_from_mesh(mesh_name: str) -> int:
@@ -372,7 +525,9 @@ def plan_inputs_from_record(record: dict, *, num_stages: int | None = None,
                             v_cap: int | None = None,
                             num_layers: int | None = None,
                             hop_overhead_s: float | None = None,
-                            bwd_fwd_ratio: float = 2.0) -> PlanInputs:
+                            bwd_fwd_ratio: float = 2.0,
+                            wire_dtype: str | None = None,
+                            extra_hints: dict | None = None) -> PlanInputs:
     """Extract planner inputs from one dry-run record (dryrun.py JSONL).
 
     * Stage time: ``max(t_compute, t_memory, t_collective)`` — the
@@ -386,20 +541,33 @@ def plan_inputs_from_record(record: dict, *, num_stages: int | None = None,
       FLOPs, so the raw terms are normalized by ``k*v / ticks``.
     * Link time: the per-chip ``collective-permute`` bytes are
       ``2 * ticks * (hop_bytes / k)`` (one micro-batch payload per tick,
-      forward + backward), inverted for ``hop_bytes`` and billed at DCN
-      bandwidth (the pipeline axis crosses pods).  Un-pipelined records
-      carry no ppermute: provide ``planner_hints.act_hop_bytes`` or use
-      ``plan_inputs_from_cfg``.
+      forward + backward), inverted for ``hop_bytes`` and billed at the
+      link bandwidth (``planner_hints.link_bw_Bps`` — e.g. measured by
+      benchmarks/ppermute_probe.py — else the HW DCN constant; the
+      pipeline axis crosses pods).  Records compiled WITH a wire codec
+      (``record["wire_dtype"]``) carry already-shrunk ppermute bytes;
+      the extraction un-scales them so ``PlanInputs.link_s`` is always
+      the uncompressed hop and codecs can be re-enumerated fairly.
+      Un-pipelined records carry no ppermute: provide
+      ``planner_hints.act_hop_bytes`` or use ``plan_inputs_from_cfg``.
+    * ``act_bytes``: uncompressed element width of the hop payload, from
+      ``planner_hints.act_dtype_bytes``, else the record's ``dtype``,
+      else bf16.  ``wire_dtype`` sets the codec the returned inputs are
+      BILLED with (default 'none'); pass ``wire_candidates`` to
+      ``choose_plan`` to enumerate instead.
 
     Per-key defaults come from an optional ``planner_hints`` dict in the
-    record (how the checked-in fixture stays self-describing); explicit
-    keyword arguments win.  ``num_stages`` requests a TARGET stage count:
-    the tick-schedule normalization below always uses the stage count the
+    record (how the checked-in fixture stays self-describing), overlaid
+    by ``extra_hints`` (e.g. a ppermute-probe JSON); explicit keyword
+    arguments win.  ``num_stages`` requests a TARGET stage count: the
+    tick-schedule normalization below always uses the stage count the
     record was actually COMPILED with (hints / pod mesh axis) — only
     then is the result re-targeted via ``with_stages``.
     """
     rl = record.get("roofline", record)
-    hints = record.get("planner_hints", {})
+    hints = dict(record.get("planner_hints", {}))
+    if extra_hints:
+        hints.update(extra_hints)
     rec_stages = hints.get("num_stages")
     if rec_stages is None:
         try:
@@ -418,9 +586,23 @@ def plan_inputs_from_record(record: dict, *, num_stages: int | None = None,
     if k0:
         stage_s *= (k0 * v0) / ticks0     # drop the masked idle-tick compute
 
+    act_bytes = hints.get("act_dtype_bytes")
+    if act_bytes is None:
+        act_bytes = _dtype_bytes(record.get("dtype"))
+    act_bytes = float(act_bytes)
+    wblock = hints.get("wire_block")
+    if wblock is None:
+        wblock = wire_block_for(record.get("d_model",
+                                           hints.get("d_model")))
+    wblock = int(wblock)
+
     pp_bytes = float(rl.get("coll_by_kind", {}).get("collective-permute", 0.0))
     if k0 and pp_bytes > 0:
         hop_bytes = pp_bytes * k0 / (2.0 * ticks0)
+        # records compiled WITH a codec ship shrunk payloads; recover the
+        # uncompressed hop so the planner prices every codec from one base
+        rec_wire = record.get("wire_dtype", "none")
+        hop_bytes /= wire_link_scale(rec_wire, act_bytes, wblock)
     elif "act_hop_bytes" in hints:
         hop_bytes = float(hints["act_hop_bytes"])
     else:
@@ -428,7 +610,7 @@ def plan_inputs_from_record(record: dict, *, num_stages: int | None = None,
             "record has no pipeline collective-permute bytes to derive the "
             "link time from — re-run dryrun with --pipeline-k, add "
             "planner_hints.act_hop_bytes, or use plan_inputs_from_cfg")
-    link_s = hop_bytes / HW["dcn_bw"]
+    link_s = hop_bytes / float(hints.get("link_bw_Bps", HW["dcn_bw"]))
 
     if hop_overhead_s is None:
         hop_overhead_s = float(hints.get("hop_overhead_s",
@@ -450,7 +632,11 @@ def plan_inputs_from_record(record: dict, *, num_stages: int | None = None,
         k_cap=k_cap, v_cap=v_cap,
         num_layers=int(num_layers) if num_layers is not None else None,
         fixed_chip_budget=True,
+        act_bytes=act_bytes,
+        wire_block=wblock,
     )
+    if wire_dtype is not None:
+        inp = inp.with_wire(wire_dtype)
     if num_stages is not None and int(num_stages) != rec_stages:
         inp = inp.with_stages(int(num_stages))
     return inp
@@ -459,31 +645,36 @@ def plan_inputs_from_record(record: dict, *, num_stages: int | None = None,
 def plan_inputs_from_cfg(cfg, *, batch: int, seq: int, num_stages: int,
                          k_cap: int | None = None, v_cap: int = 4,
                          hop_overhead_s: float | None = None,
-                         bwd_fwd_ratio: float = 2.0) -> PlanInputs:
+                         bwd_fwd_ratio: float = 2.0,
+                         link_bw_Bps: float | None = None) -> PlanInputs:
     """Compile-free planner inputs estimated from a model config.
 
     Used by ``train.py --pipeline-k auto`` when no dry-run record is
     supplied: 2N FLOPs/token forward, one chip per stage, the cut
-    activation ``batch*seq*d_model`` at the config dtype over DCN.  The
-    absolute scale is TPU-flavored (HW constants) but only the
+    activation ``batch*seq*d_model`` at the config dtype over DCN (or a
+    measured ``link_bw_Bps``, e.g. from benchmarks/ppermute_probe.py).
+    The absolute scale is TPU-flavored (HW constants) but only the
     compute/link/overhead ratios steer the chosen (k, v).
     """
     n_params = float(cfg.param_count())
     tokens = float(batch) * float(seq)
     total_fwd_s = 2.0 * n_params * tokens / HW["peak_flops_bf16"]
-    act_bytes = float(batch) * float(seq) * float(cfg.d_model) \
-        * np.dtype(cfg.dtype).itemsize
+    elt_bytes = float(np.dtype(cfg.dtype).itemsize)
+    act_bytes = float(batch) * float(seq) * float(cfg.d_model) * elt_bytes
     return PlanInputs(
         num_stages=num_stages,
         stage_fwd_s=total_fwd_s / num_stages,
         stage_bwd_s=bwd_fwd_ratio * total_fwd_s / num_stages,
-        link_s=act_bytes / HW["dcn_bw"],
+        link_s=act_bytes / (HW["dcn_bw"] if link_bw_Bps is None
+                            else float(link_bw_Bps)),
         hop_overhead_s=HW["dcn_latency_s"] if hop_overhead_s is None
         else hop_overhead_s,
         k_cap=max(1, min(batch, 64)) if k_cap is None else k_cap,
         v_cap=v_cap,
         num_layers=cfg.num_layers,
         fixed_chip_budget=False,
+        act_bytes=elt_bytes,
+        wire_block=wire_block_for(cfg.d_model),
     )
 
 
@@ -526,10 +717,23 @@ def main(argv=None):
     ap.add_argument("--hop-overhead", type=float, default=None,
                     help="per-hop message overhead seconds "
                          "(default: HW dcn latency / record hints)")
+    ap.add_argument("--wire", default="none",
+                    choices=["none", "int8", "fp8", "auto"],
+                    help="hop codec to bill the plan with; 'auto' "
+                         "enumerates the codec jointly with (k, v)")
+    ap.add_argument("--hints", default=None,
+                    help="JSON with measured planner_hints (e.g. the "
+                         "benchmarks/ppermute_probe.py output) overlaid "
+                         "on the record's own hints")
     ap.add_argument("--out", default=None,
                     help="write the chosen plan as JSON")
     args = ap.parse_args(argv)
 
+    extra_hints = None
+    if args.hints:
+        with open(args.hints) as f:
+            doc = json.load(f)
+        extra_hints = doc.get("planner_hints", doc)
     record = load_record(args.roofline, args.record_index)
     inp = plan_inputs_from_record(
         record,
@@ -537,12 +741,17 @@ def main(argv=None):
         k_cap=args.k_cap or None,
         v_cap=args.v_cap or None,
         num_layers=args.layers or None,
-        hop_overhead_s=args.hop_overhead)
+        hop_overhead_s=args.hop_overhead,
+        wire_dtype=None if args.wire == "auto" else args.wire,
+        extra_hints=extra_hints)
     cands = None
     if args.stage_candidates:
         cands = [int(s) for s in args.stage_candidates.split(",") if s]
-    plan = choose_plan(inp, stage_candidates=cands)
-    print(f"auto plan: S={plan.num_stages} k={plan.k} v={plan.v}  "
+    plan = choose_plan(
+        inp, stage_candidates=cands,
+        wire_candidates=list(WIRE_AUTO) if args.wire == "auto" else None)
+    print(f"auto plan: S={plan.num_stages} k={plan.k} v={plan.v} "
+          f"wire={plan.wire_dtype}  "
           f"wall {plan.wall_s * 1e3:.3f} ms/batch  "
           f"({plan.speedup:.2f}x vs unpipelined, "
           f"bubble {plan.bubble:.3f})")
@@ -551,7 +760,7 @@ def main(argv=None):
             "source": args.roofline,
             "record": {key: record.get(key) for key in
                        ("arch", "shape", "mesh", "chips",
-                        "pipeline_k", "pipeline_v")},
+                        "pipeline_k", "pipeline_v", "wire_dtype")},
             "plan": plan.to_dict(),
         }
         with open(args.out, "w") as f:

@@ -45,6 +45,7 @@ from repro.training.optim import adamw
 
 def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
                *, pipeline_k: int = 0, pipeline_v: int = 1,
+               wire_dtype: str = "none",
                microbatches: int = 1,
                cast_gathers: bool = False, seq_shard: bool | None = None,
                master_fp32: bool = False, pure_dp: bool = False):
@@ -54,6 +55,11 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
             "pipeline_v > 1 requires pipeline_k (interleaving subdivides "
             "pipeline stages; without the pipeline the record would claim "
             "an interleave that never ran)")
+    if wire_dtype not in (None, "none") and not pipeline_k:
+        raise ValueError(
+            "wire_dtype requires pipeline_k (the codec compresses the "
+            "pipeline hop; without the pipeline the record would claim a "
+            "codec that never ran)")
     arch = get_arch(arch_name)
     shape = SHAPES[shape_name]
     cfg = arch.full
@@ -102,7 +108,8 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
                 assert multi_pod, "the C2P2SL pipeline runs over the pod axis"
                 pipeline = PipelineSpec(num_stages=mesh.shape["pod"],
                                         microbatches=pipeline_k,
-                                        virtual_stages=pipeline_v)
+                                        virtual_stages=pipeline_v,
+                                        wire_dtype=wire_dtype or "none")
             step = make_lm_train_step(model, opt, microbatches=microbatches,
                                       pipeline=pipeline)
             jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
@@ -153,8 +160,11 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "chips": chips,
         "kind": shape.kind,
+        "dtype": cfg.dtype,
+        "d_model": cfg.d_model,
         "pipeline_k": pipeline_k,
         "pipeline_v": pipeline_v,
+        "wire_dtype": wire_dtype or "none",
         "microbatches": microbatches,
         "compile_s": round(time.time() - t0, 1),
         "state_bytes_per_device": state_bytes,
@@ -173,20 +183,33 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
         },
     }
     if pipeline_k and shape.kind == "train":
-        # Machine-readable auto-plan: what (k, v) the roofline planner
-        # would pick for this cell (feeds train.py --plan-roofline and
-        # benchmarks/perf_iter.py --pipeline-auto).
-        from repro.analysis.autotune import (choose_plan,
-                                             plan_inputs_from_record)
+        # Machine-readable auto-plan: what (k, v, wire codec) the roofline
+        # planner would pick for this cell (feeds train.py
+        # --plan-roofline and benchmarks/perf_iter.py --pipeline-auto).
+        # ``wire_sweep`` keeps the per-codec evidence — which codec won
+        # and by how much — next to the chosen plan.
+        from repro.analysis.autotune import (plan_inputs_from_record,
+                                             wire_plan_sweep)
         try:
             inp = plan_inputs_from_record(
                 record, num_stages=mesh.shape["pod"],
                 k_cap=max(1, shape.global_batch // mesh.shape["data"]),
                 num_layers=cfg.num_layers)
-            record["auto_plan"] = choose_plan(inp).to_dict()
+            sweep = wire_plan_sweep(inp)
+            record["auto_plan"] = sweep["chosen"]
+            record["auto_plan"]["wire_sweep"] = sweep["sweep"]
         except (ValueError, KeyError) as e:
             record["auto_plan"] = {"error": str(e)}
     return record, compiled
+
+
+def cell_key(arch, shape, mesh, pipeline_k, pipeline_v, wire_dtype):
+    """--skip-done identity of a cell: EVERY knob that changes what gets
+    compiled must be in here, or re-runs with a new knob value are
+    silently skipped as already done.  Records from before a knob
+    existed read as its default (v=1, wire 'none')."""
+    return (arch, shape, mesh, int(pipeline_k or 0), int(pipeline_v or 1),
+            wire_dtype or "none")
 
 
 def main():
@@ -200,6 +223,11 @@ def main():
                          "(multi-pod train only)")
     ap.add_argument("--pipeline-v", type=int, default=1,
                     help="interleaved virtual stages per pipeline stage")
+    ap.add_argument("--wire-dtype", default="none",
+                    choices=["none", "int8", "fp8"],
+                    help="wire codec on the pipeline's cut-activation "
+                         "hop (parallel/wire.py); records carry it so "
+                         "the planner can un-scale the ppermute bytes")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--out", default="results/dryrun.jsonl")
     ap.add_argument("--plan-out", default=None,
@@ -221,8 +249,10 @@ def main():
             for line in f:
                 try:
                     r = json.loads(line)
-                    done.add((r["arch"], r["shape"], r["mesh"],
-                              r.get("pipeline_k", 0)))
+                    done.add(cell_key(r["arch"], r["shape"], r["mesh"],
+                                      r.get("pipeline_k", 0),
+                                      r.get("pipeline_v", 1),
+                                      r.get("wire_dtype", "none")))
                 except (json.JSONDecodeError, KeyError):
                     pass
 
@@ -242,7 +272,9 @@ def main():
                 continue
             for multi in meshes:
                 mesh_name = "2x16x16" if multi else "16x16"
-                key = (arch_name, shape_name, mesh_name, args.pipeline_k)
+                key = cell_key(arch_name, shape_name, mesh_name,
+                               args.pipeline_k, args.pipeline_v,
+                               args.wire_dtype)
                 if key in done:
                     print(f"done  {key}")
                     continue
@@ -253,6 +285,7 @@ def main():
                         arch_name, shape_name, multi,
                         pipeline_k=args.pipeline_k,
                         pipeline_v=args.pipeline_v,
+                        wire_dtype=args.wire_dtype,
                         microbatches=args.microbatches)
                     mem = rec["memory"]
                     rl = rec["roofline"]
@@ -272,6 +305,7 @@ def main():
                         if "k" in ap_rec:
                             print(f"  auto plan: k={ap_rec['k']} "
                                   f"v={ap_rec['v']} "
+                                  f"wire={ap_rec.get('wire_dtype', 'none')} "
                                   f"({ap_rec['speedup']:.2f}x vs "
                                   f"unpipelined)", flush=True)
                     n_ok += 1

@@ -66,20 +66,46 @@ def _parse_auto_int(value, flag: str):
             f"{flag} must be an integer or 'auto', got {value!r}")
 
 
+def _load_plan_hints(plan_hints):
+    """Measured planner hints (benchmarks/ppermute_probe.py JSON) -> dict."""
+    if not plan_hints:
+        return None
+    try:
+        with open(plan_hints) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SystemExit(f"--plan-hints {plan_hints}: {e}")
+    hints = doc.get("planner_hints", doc)
+    if not isinstance(hints, dict):
+        raise SystemExit(
+            f"--plan-hints {plan_hints}: expected a JSON object with a "
+            "planner_hints dict (see benchmarks/ppermute_probe.py)")
+    return hints
+
+
 def resolve_pipeline_plan(*, pipeline_stages: int, pipeline_k,
                           virtual_stages, cfg, batch: int, seq: int,
-                          plan_roofline: str | None = None):
-    """Resolve the (S, k, v) pipeline decision from flags + the planner.
+                          plan_roofline: str | None = None,
+                          wire_dtype: str = "none",
+                          plan_hints: str | None = None):
+    """Resolve the (S, k, v, wire) pipeline decision from flags + planner.
 
     Returns ``(PipelineSpec | None, info)``.  ``info`` records where each
-    value came from — ``flag`` (hand-supplied integer), ``auto`` (the
-    roofline planner, asked for explicitly), ``auto:default`` (k was
-    unset: the planner picks it, replacing the old silent k=4 default),
-    or ``default`` (v unset stays 1).  When the planner runs, ``info``
-    carries its full ``AutoPlan`` evidence under ``"plan"``.
+    value came from — ``flag`` (hand-supplied), ``auto`` (the roofline
+    planner, asked for explicitly), ``auto:default`` (k was unset: the
+    planner picks it, replacing the old silent k=4 default), or
+    ``default`` (v unset stays 1; wire unset stays 'none').  When the
+    planner runs, ``info`` carries its full ``AutoPlan`` evidence under
+    ``"plan"``.  ``plan_hints`` overlays measured planner hints (the
+    ppermute-probe calibration) on the record's own.
     """
     k_arg = _parse_auto_int(pipeline_k, "--pipeline-k")
     v_arg = _parse_auto_int(virtual_stages, "--virtual-stages")
+    wire = "none" if wire_dtype is None else str(wire_dtype).strip().lower()
+    if wire not in ("none", "int8", "fp8", "auto"):
+        raise SystemExit(
+            f"--wire-dtype must be none, int8, fp8 or auto, got "
+            f"{wire_dtype!r}")
     if pipeline_stages <= 1:
         if v_arg not in (None, 1):
             raise SystemExit(
@@ -89,6 +115,10 @@ def resolve_pipeline_plan(*, pipeline_stages: int, pipeline_k,
             raise SystemExit(
                 "--pipeline-k requires --pipeline-stages > 1 "
                 "(use --microbatches for plain gradient accumulation)")
+        if wire != "none":
+            raise SystemExit(
+                "--wire-dtype requires --pipeline-stages > 1 (the codec "
+                "compresses the inter-stage pipeline hop)")
         return None, {"enabled": False}
     if isinstance(k_arg, int) and k_arg < 1:
         raise SystemExit(f"--pipeline-k {k_arg} must be >= 1")
@@ -98,30 +128,39 @@ def resolve_pipeline_plan(*, pipeline_stages: int, pipeline_k,
         else ("auto" if k_arg == "auto" else "auto:default")
     v_src = "flag" if isinstance(v_arg, int) \
         else ("auto" if v_arg == "auto" else "default")
+    wire_src = "auto" if wire == "auto" \
+        else ("flag" if wire != "none" else "default")
 
     from repro.parallel.pipeline import PipelineSpec
-    if isinstance(k_arg, int) and (isinstance(v_arg, int) or v_arg is None):
+    if isinstance(k_arg, int) and (isinstance(v_arg, int) or v_arg is None) \
+            and wire != "auto":
         spec = PipelineSpec(num_stages=pipeline_stages, microbatches=k_arg,
-                            virtual_stages=v_arg if v_arg else 1)
+                            virtual_stages=v_arg if v_arg else 1,
+                            wire_dtype=wire)
         return spec, {"enabled": True, "k": spec.microbatches,
-                      "v": spec.virtual_stages, "k_source": k_src,
-                      "v_source": v_src, "plan": None}
+                      "v": spec.virtual_stages, "wire": spec.wire_dtype,
+                      "k_source": k_src, "v_source": v_src,
+                      "wire_source": wire_src, "plan": None}
 
     import dataclasses as _dc
 
     from repro.analysis import autotune
+    extra_hints = _load_plan_hints(plan_hints)
     if plan_roofline:
         try:
             record = autotune.load_record(plan_roofline)
             inp = autotune.plan_inputs_from_record(
                 record, num_stages=pipeline_stages,
-                num_layers=cfg.num_layers)
+                num_layers=cfg.num_layers, extra_hints=extra_hints)
         except (OSError, ValueError) as e:   # unreadable / unpipelined record
             raise SystemExit(f"--plan-roofline {plan_roofline}: {e}")
         inp_src = plan_roofline
     else:
+        hints = extra_hints or {}
         inp = autotune.plan_inputs_from_cfg(
-            cfg, batch=batch, seq=seq, num_stages=pipeline_stages)
+            cfg, batch=batch, seq=seq, num_stages=pipeline_stages,
+            hop_overhead_s=hints.get("hop_overhead_s"),
+            link_bw_Bps=hints.get("link_bw_Bps"))
         inp_src = "config estimate (no --plan-roofline)"
     # a micro-batch needs at least one sample row
     inp = _dc.replace(inp, k_cap=max(1, min(inp.k_cap, batch)))
@@ -130,12 +169,14 @@ def resolve_pipeline_plan(*, pipeline_stages: int, pipeline_k,
             inp,
             k_fixed=k_arg if isinstance(k_arg, int) else None,
             v_fixed=v_arg if isinstance(v_arg, int)
-            else (1 if v_arg is None else None))
+            else (1 if v_arg is None else None),
+            wire_dtype=wire)
     except ValueError as e:               # e.g. S*v does not divide layers
         raise SystemExit(str(e))
     return spec, {"enabled": True, "k": spec.microbatches,
-                  "v": spec.virtual_stages, "k_source": k_src,
-                  "v_source": v_src, "roofline": inp_src,
+                  "v": spec.virtual_stages, "wire": spec.wire_dtype,
+                  "k_source": k_src, "v_source": v_src,
+                  "wire_source": wire_src, "roofline": inp_src,
                   "plan": plan.to_dict()}
 
 
@@ -163,12 +204,30 @@ def main(argv=None):
                          "direction at the same k; 'auto' lets the "
                          "planner trade the extra ppermute volume "
                          "against the bubble shrink (unset: 1)")
+    ap.add_argument("--wire-dtype", default="none",
+                    choices=["none", "int8", "fp8", "auto"],
+                    help="wire codec for the pipeline's cut-activation "
+                         "hop (parallel/wire.py): int8/fp8 block-"
+                         "quantize the ppermute payload both directions; "
+                         "'auto' lets the roofline planner enumerate the "
+                         "codec jointly with (k, v)")
     ap.add_argument("--plan-roofline", default=None,
                     help="dry-run record (JSON/JSONL) driving the "
                          "auto-planner; default: compile-free config "
                          "estimate (repro.analysis.autotune)")
+    ap.add_argument("--plan-hints", default=None,
+                    help="measured planner hints JSON "
+                         "(benchmarks/ppermute_probe.py) overlaid on the "
+                         "record hints — calibrates hop_overhead_s and "
+                         "link bandwidth from a real ppermute instead of "
+                         "the HW constants")
     ap.add_argument("--plan-out", default=None,
                     help="write the resolved pipeline plan as JSON")
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8 block-quantized gradients with error "
+                         "feedback before the optimizer update "
+                         "(training/compress.py; EPSL's BP-payload "
+                         "compression generalized to the DP axis)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=20)
@@ -184,12 +243,27 @@ def main(argv=None):
                 grad_clip=1.0)
     state = {"params": params, "opt_state": opt.init(params),
              "step": jnp.zeros((), jnp.int32)}
+    if args.compress_grads:
+        from repro.training.compress import init_error_fb
+        state["error_fb"] = init_error_fb(params)
 
     # resume-from-checkpoint (fault-tolerance entry point)
     if args.ckpt_dir:
         last = ckpt_lib.latest_step(args.ckpt_dir)
         if last is not None:
-            state = ckpt_lib.restore(args.ckpt_dir, last, state)
+            try:
+                state = ckpt_lib.restore(args.ckpt_dir, last, state)
+            except KeyError as e:
+                # checkpoints taken BEFORE --compress-grads carry no
+                # error-feedback tree; restore everything else and let
+                # EF restart from zero (its natural initial state)
+                if "error_fb" not in state or "error_fb" not in str(e):
+                    raise
+                efb = state.pop("error_fb")
+                state = ckpt_lib.restore(args.ckpt_dir, last, state)
+                state["error_fb"] = efb
+                print("checkpoint predates --compress-grads — "
+                      "error feedback restarts at zero")
             print(f"resumed from step {last}")
 
     pipeline, plan_info = resolve_pipeline_plan(
@@ -197,7 +271,9 @@ def main(argv=None):
         pipeline_k=args.pipeline_k,
         virtual_stages=args.virtual_stages,
         cfg=cfg, batch=args.batch, seq=args.seq,
-        plan_roofline=args.plan_roofline)
+        plan_roofline=args.plan_roofline,
+        wire_dtype=args.wire_dtype,
+        plan_hints=args.plan_hints)
     mesh = None
     if pipeline is not None:
         if args.microbatches != 1:
@@ -209,7 +285,8 @@ def main(argv=None):
         mesh = make_host_mesh(pod=args.pipeline_stages)
         line = (f"pipeline: S={pipeline.num_stages} "
                 f"k={pipeline.microbatches} [{plan_info['k_source']}] "
-                f"v={pipeline.virtual_stages} [{plan_info['v_source']}]")
+                f"v={pipeline.virtual_stages} [{plan_info['v_source']}] "
+                f"wire={pipeline.wire_dtype} [{plan_info['wire_source']}]")
         if plan_info.get("plan"):
             p = plan_info["plan"]
             line += (f"  modeled {p['wall_s'] * 1e3:.1f} ms/batch, "
@@ -221,7 +298,8 @@ def main(argv=None):
             json.dump(plan_info, f, indent=1)
     step_fn = jax.jit(make_lm_train_step(model, opt,
                                          microbatches=args.microbatches,
-                                         pipeline=pipeline, mesh=mesh))
+                                         pipeline=pipeline, mesh=mesh,
+                                         compress=args.compress_grads))
     it = build_batch_iter(cfg, args.batch, args.seq, args.seed)
 
     history = []

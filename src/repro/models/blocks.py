@@ -122,7 +122,8 @@ def _ffn(p, x, cfg: LMConfig, dt):
     h = apply_norm(x, p["ln2"], cfg.norm)
     if "moe" in p:
         out, aux = apply_moe(p["moe"], h, topk=cfg.moe_topk,
-                             cap_factor=cfg.moe_capacity, act=cfg.act)
+                             cap_factor=cfg.moe_capacity, act=cfg.act,
+                             global_aux=cfg.moe_global_aux)
         return x + out, aux
     return x + _mlp(p["mlp"], h, cfg, dt), jnp.float32(0.0)
 

@@ -36,6 +36,11 @@ class LMConfig:
     moe_experts: int = 0
     moe_topk: int = 0
     moe_capacity: float = 1.25
+    # psum router statistics (me, ce) across mesh shards before forming
+    # the load-balance aux — the sharded aux then equals the full-batch
+    # aux exactly instead of the mean of per-shard auxes (ROADMAP item;
+    # the pipeline's PER-MICRO-BATCH deviation remains, see DESIGN.md §6)
+    moe_global_aux: bool = False
     # recurrent widths
     lru_width: int | None = None
     conv_width: int = 4

@@ -43,8 +43,22 @@ def _capacity(n_tokens: int, topk: int, n_experts: int, factor: float) -> int:
     return max(8, ((c + 7) // 8) * 8)
 
 
-def _moe_local(x, router, w1, w3, w2, *, topk: int, capacity: int, act: str):
-    """Dispatch/combine on one shard.  x: [T, D] -> ([T, D], aux_loss)."""
+def router_aux(me, ce):
+    """Switch-style load-balance aux from router statistics:
+    ``E * sum_e f_e * p_e``.  ``me`` = mean router probability per expert,
+    ``ce`` = fraction of top-k assignments per expert; both [E].  Exposed
+    so shard-level callers can average the STATISTICS across shards
+    (pmean) before forming the product — the psum'd global-statistics
+    aux, which equals the full-batch aux exactly for equal shard sizes
+    (the mean of per-shard ``me * ce`` products does not)."""
+    e = me.shape[-1]
+    return e * jnp.sum(me * ce)
+
+
+def _moe_local(x, router, w1, w3, w2, *, topk: int, capacity: int, act: str,
+               return_stats: bool = False):
+    """Dispatch/combine on one shard.  x: [T, D] -> ([T, D], aux_loss)
+    (plus the (me, ce) router statistics when ``return_stats``)."""
     t, d = x.shape
     e = router.shape[1]
     logits = (x.astype(jnp.float32) @ router.astype(jnp.float32))
@@ -56,7 +70,7 @@ def _moe_local(x, router, w1, w3, w2, *, topk: int, capacity: int, act: str):
     me = jnp.mean(probs, axis=0)
     ce = jnp.mean(
         jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(1), axis=0) / topk
-    aux = e * jnp.sum(me * ce)
+    aux = router_aux(me, ce)
 
     eid = idx.reshape(-1)                                       # [T*K]
     onehot = jax.nn.one_hot(eid, e, dtype=jnp.int32)
@@ -79,11 +93,21 @@ def _moe_local(x, router, w1, w3, w2, *, topk: int, capacity: int, act: str):
     picked = flat[slot] * (gate.reshape(-1, 1).astype(y.dtype)
                            * keep[:, None].astype(y.dtype))
     out = picked.reshape(t, topk, d).sum(axis=1)
+    if return_stats:
+        return out, aux, me, ce
     return out, aux
 
 
-def apply_moe(params, x, *, topk: int, cap_factor: float, act: str):
-    """x: [B, S, D] -> ([B, S, D], aux).  Shard-aware via the parallel ctx."""
+def apply_moe(params, x, *, topk: int, cap_factor: float, act: str,
+              global_aux: bool = False):
+    """x: [B, S, D] -> ([B, S, D], aux).  Shard-aware via the parallel ctx.
+
+    ``global_aux`` switches the load-balance aux from the mean of
+    per-shard auxes (the documented deviation) to the aux of the pmean'd
+    GLOBAL router statistics — identical to the single-device full-batch
+    aux when the token shards partition the batch evenly.  No effect
+    without a mesh (the local aux already sees every token).
+    """
     ctx = get_ctx()
     b, s, d = x.shape
     if ctx.mesh is None:
@@ -112,9 +136,15 @@ def apply_moe(params, x, *, topk: int, cap_factor: float, act: str):
 
         def shard_fn(xs, router, w1, w3, w2):
             t_loc = xs.shape[0] * xs.shape[1]
-            out, aux = _moe_local(xs.reshape(t_loc, d), router, w1, w3, w2,
-                                  topk=topk, capacity=cap, act=act)
-            aux = jax.lax.pmean(aux, batch_axes + model_axes)
+            out, aux, me, ce = _moe_local(
+                xs.reshape(t_loc, d), router, w1, w3, w2,
+                topk=topk, capacity=cap, act=act, return_stats=True)
+            if global_aux:
+                me = jax.lax.pmean(me, batch_axes + model_axes)
+                ce = jax.lax.pmean(ce, batch_axes + model_axes)
+                aux = router_aux(me, ce)
+            else:
+                aux = jax.lax.pmean(aux, batch_axes + model_axes)
             return out.reshape(xs.shape), aux
 
         fn = compat.shard_map(
@@ -131,13 +161,22 @@ def apply_moe(params, x, *, topk: int, cap_factor: float, act: str):
 
     def shard_fn(xs, router, w1, w3, w2):
         t_loc = xs.shape[0] * xs.shape[1]
-        out, aux = _moe_local(xs.reshape(t_loc, d), router, w1, w3, w2,
-                              topk=topk, capacity=cap, act=act)
+        out, aux, me, ce = _moe_local(
+            xs.reshape(t_loc, d), router, w1, w3, w2,
+            topk=topk, capacity=cap, act=act, return_stats=True)
         # Second projection is row-parallel over the model axis (pure-DP
         # mode has no model axes: experts are whole per shard, no psum).
         if model_axes:
             out = jax.lax.psum(out, model_axes)
-        aux = jax.lax.pmean(aux, batch_axes + model_axes)
+        if global_aux:
+            # pmean the STATISTICS, then form the product: equals the
+            # full-batch aux (model-axis shards see identical tokens, so
+            # their pmean is an identity; data shards partition tokens)
+            me = jax.lax.pmean(me, batch_axes + model_axes)
+            ce = jax.lax.pmean(ce, batch_axes + model_axes)
+            aux = router_aux(me, ce)
+        else:
+            aux = jax.lax.pmean(aux, batch_axes + model_axes)
         return out.reshape(xs.shape), aux
 
     w_spec = P(None, None, model_axes) if model_axes else P(None)

@@ -54,6 +54,14 @@ Version portability (all probing in ``parallel/compat.py``):
 
 Embedding and LM head run replicated across pods (negligible FLOP share);
 the ppermuted tensor is the cut-layer activation — the paper's ``s_l``.
+
+``PipelineSpec.wire_dtype`` selects the wire codec for that hop
+(``parallel/wire.py``): ``"int8"`` / ``"fp8"`` block-quantize the cut
+activation before each forward ppermute and the activation gradient on
+the transposed backward ppermute — EPSL's payload compression applied to
+the pod boundary — while ``"none"`` keeps the raw ppermute bit-for-bit.
+The codec wraps the hop only; both shard_map lowerings share it through
+``_tick_loop``.
 """
 from __future__ import annotations
 
@@ -64,7 +72,7 @@ import jax.numpy as jnp
 
 from repro.models.blocks import apply_block
 from repro.models.common import apply_norm
-from repro.parallel import compat
+from repro.parallel import compat, wire
 from repro.parallel.compat import PartitionSpec as P
 from repro.parallel.context import ParallelCtx, use_ctx
 
@@ -74,7 +82,17 @@ class PipelineSpec:
     num_stages: int = 2          # S: UE-side / BS-side (extensible)
     microbatches: int = 4        # k — pick with repro.core.ao.lemma1_k
     virtual_stages: int = 1      # v: interleaved model chunks per stage
+    wire_dtype: str = "none"     # hop codec: none | int8 | fp8 (wire.py)
     axis: str = "pod"
+
+    def __post_init__(self):
+        # normalize the codec name at construction so every consumer
+        # (the tick loop's coded-vs-raw branch, planners, logs) sees one
+        # spelling; membership/availability is validated when the
+        # pipeline actually runs (pipeline_blocks)
+        norm = "none" if self.wire_dtype is None \
+            else str(self.wire_dtype).strip().lower()
+        object.__setattr__(self, "wire_dtype", norm)
 
     @classmethod
     def auto_k(cls, stage_compute_s: float, link_s: float, *,
@@ -93,22 +111,27 @@ class PipelineSpec:
     @classmethod
     def auto_plan(cls, source, *, num_stages: int | None = None,
                   k_fixed: int | None = None, v_fixed: int | None = None,
+                  wire_dtype: str | None = None,
                   axis: str = "pod", **extract_kwargs):
-        """Spec with (k, v) chosen by the roofline auto-planner.
+        """Spec with (k, v[, wire codec]) chosen by the roofline planner.
 
         ``source`` is a dry-run record dict (launch/dryrun.py JSONL), a
         ``repro.analysis.autotune.PlanInputs``, or an already-chosen
         ``AutoPlan``.  ``k_fixed`` / ``v_fixed`` pin one coordinate (a
-        hand flag overriding half of an auto plan).  Returns
-        ``(spec, AutoPlan)`` so callers can log/record the evidence.
+        hand flag overriding half of an auto plan).  ``wire_dtype`` pins
+        the hop codec ('none'/'int8'/'fp8'); ``'auto'`` asks the planner
+        to enumerate the codec jointly with (k, v) — a smaller wire moves
+        the argmin.  Returns ``(spec, AutoPlan)`` so callers can
+        log/record the evidence.
         """
         from repro.analysis import autotune
         if isinstance(source, autotune.AutoPlan):
-            if k_fixed is not None or v_fixed is not None:
+            if k_fixed is not None or v_fixed is not None \
+                    or wire_dtype is not None:
                 raise ValueError(
-                    "k_fixed/v_fixed cannot re-pin an already-chosen "
-                    "AutoPlan — pass its PlanInputs (plan.inputs) to "
-                    "re-plan with pins")
+                    "k_fixed/v_fixed/wire_dtype cannot re-pin an "
+                    "already-chosen AutoPlan — pass its PlanInputs "
+                    "(plan.inputs) to re-plan with pins")
             plan = source
         else:
             inp = source
@@ -117,10 +140,17 @@ class PipelineSpec:
                     source, num_stages=num_stages, **extract_kwargs)
             elif num_stages is not None and num_stages != inp.num_stages:
                 inp = inp.with_stages(num_stages)
+            wire_candidates = None
+            if wire_dtype == "auto":
+                wire_candidates = list(autotune.WIRE_AUTO)
+            elif wire_dtype is not None:
+                inp = inp.with_wire(wire_dtype)
             plan = autotune.choose_plan(inp, k_fixed=k_fixed,
-                                        v_fixed=v_fixed)
+                                        v_fixed=v_fixed,
+                                        wire_candidates=wire_candidates)
         spec = cls(num_stages=plan.num_stages, microbatches=plan.k,
-                   virtual_stages=plan.v, axis=axis)
+                   virtual_stages=plan.v,
+                   wire_dtype=getattr(plan, "wire_dtype", "none"), axis=axis)
         return spec, plan
 
 
@@ -189,6 +219,7 @@ def pipeline_blocks(cfg, blocks, xs, positions, spec: PipelineSpec, *,
     if spec.virtual_stages < 1:
         raise ValueError(
             f"virtual_stages={spec.virtual_stages} must be >= 1")
+    wire.validate_wire_dtype(spec.wire_dtype)
     staged = _split_stages(blocks, spec.num_stages, spec.virtual_stages)
     k = xs.shape[0]
     run = (_pipeline_partial_manual if compat.CAPS.partial_manual
@@ -237,6 +268,16 @@ def _tick_loop(spec, stage, k, xs_full, enc_full, state0, aux0, run_stage):
     s_stages = spec.num_stages
     v = spec.virtual_stages
     ticks = _sigma(k - 1, s_stages, v) + s_stages * v
+    coded = spec.wire_dtype not in (None, "none")
+
+    def hop(y, perm):
+        """One inter-stage hop: the raw ppermute (bit-identical to the
+        uncoded pipeline), or the quantized wire round trip whose
+        custom_vjp codes the transposed backward hop the same way."""
+        if not coded:
+            return jax.lax.ppermute(y, spec.axis, perm)
+        return wire.coded_ppermute(spec.wire_dtype, spec.axis,
+                                   tuple(perm), y)
 
     def tick(carry, t):
         state, aux_acc = carry
@@ -261,12 +302,10 @@ def _tick_loop(spec, stage, k, xs_full, enc_full, state0, aux0, run_stage):
         if s_stages == 1:
             nxt = y                            # chunk chain stays local
         elif v > 1:
-            nxt = jax.lax.ppermute(
-                y, spec.axis,
-                [(i, (i + 1) % s_stages) for i in range(s_stages)])
+            nxt = hop(y, [(i, (i + 1) % s_stages)
+                          for i in range(s_stages)])
         else:
-            nxt = jax.lax.ppermute(
-                y, spec.axis, [(i, i + 1) for i in range(s_stages - 1)])
+            nxt = hop(y, [(i, i + 1) for i in range(s_stages - 1)])
         aux_acc = aux_acc + jnp.where(live, aux, 0.0)
         return (nxt, aux_acc), y
 

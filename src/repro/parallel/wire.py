@@ -1,0 +1,128 @@
+"""Quantized wire codec for the inter-stage pipeline hop.
+
+The pod pipeline's wall time is gated by moving the cut-layer activation
+``s_l`` (forward hop) and its gradient (the transposed backward hop) across
+the slow inter-pod link — exactly the payload EPSL shrinks on the wireless
+uplink.  This module compresses that payload on the wire only: each hop
+
+    encode (block-quantize)  ->  ppermute payload + scales  ->  decode
+
+so the stages themselves keep computing in the model dtype and the
+schedule/autodiff structure of ``parallel/pipeline.py`` is untouched.  The
+whole round trip is wrapped in a ``custom_vjp`` whose backward rule applies
+the SAME codec to the activation-gradient payload on the reversed
+permutation — the downlink pays the same wire discount as the uplink.
+
+Codec format (shared quantizer with ``training/compress.py``):
+
+  * blocks are taken along the LAST axis (d_model) so the leading
+    micro-batch/sequence dims — the dims GSPMD shards over ``data`` inside
+    the partial-manual lowering — are never mixed across devices by a
+    reshape;
+  * block size is the largest divisor of d_model that is <= 256 (no
+    padding: the wire never carries bytes the activation doesn't have);
+  * per-block fp32 absmax scales: payload = int8 (block max -> 127) or
+    fp8-e4m3 (block max -> 448), ~``1 + 4/block`` bytes/element on the
+    wire vs 2 (bf16) / 4 (fp32) uncompressed;
+  * NO error feedback on this path: every tick quantizes a different
+    micro-batch's activation, so there is no persistent tensor a residual
+    could be fed back into (docs/wire.md discusses the EF/no-EF choice).
+
+``wire_dtype="none"`` never enters this module from the pipeline — the
+tick loop keeps the raw ``ppermute`` path bit-for-bit identical to the
+uncoded pipeline.
+
+Devices outside the permutation (the last stage of an acyclic v=1 hop)
+receive zero payloads AND zero scales, decoding to exact zeros — matching
+the raw ppermute's zero-fill semantics, so warm-up/drain ticks behave
+identically under every codec.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.compress import (dequantize_blocks, payload_dtype,
+                                     quantize_blocks)
+
+WIRE_DTYPES = ("none", "int8", "fp8")
+
+
+def validate_wire_dtype(wire_dtype: str) -> str:
+    """Normalize + validate a codec name ('none' | 'int8' | 'fp8')."""
+    w = "none" if wire_dtype is None else str(wire_dtype).strip().lower()
+    if w not in WIRE_DTYPES:
+        raise ValueError(
+            f"wire_dtype {wire_dtype!r} not in {WIRE_DTYPES} — 'none' ships "
+            "the raw activation, 'int8'/'fp8' block-quantize the hop")
+    if w == "fp8":
+        payload_dtype("fp8")  # raises on JAX without float8_e4m3fn
+    return w
+
+
+def wire_block(dim: int, block: int = 256) -> int:
+    """Largest block size <= ``block`` dividing ``dim`` (no padding)."""
+    b = min(block, max(dim, 1))
+    while dim % b:
+        b -= 1
+    return b
+
+
+def encode(x, wire_dtype: str):
+    """[..., d] activation -> (payload [..., d/b, b], fp32 scales
+    [..., d/b, 1]) for a quantized codec."""
+    d = x.shape[-1]
+    b = wire_block(d)
+    blocks = x.astype(jnp.float32).reshape(x.shape[:-1] + (d // b, b))
+    return quantize_blocks(blocks, wire_dtype)
+
+
+def decode(payload, scale, out_dtype):
+    """Inverse of ``encode``: back to [..., d] at the activation dtype."""
+    x = dequantize_blocks(payload, scale)
+    return x.reshape(
+        x.shape[:-2] + (x.shape[-2] * x.shape[-1],)).astype(out_dtype)
+
+
+def roundtrip(x, wire_dtype: str):
+    """encode->decode without the permute — the codec's numerical identity
+    (what a stage receives when the link is lossless)."""
+    q, s = encode(x, wire_dtype)
+    return decode(q, s, x.dtype)
+
+
+def _coded_hop(wire_dtype, axis_name, perm, x):
+    q, s = encode(x, wire_dtype)
+    q = jax.lax.ppermute(q, axis_name, perm)
+    s = jax.lax.ppermute(s, axis_name, perm)
+    return decode(q, s, x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def coded_ppermute(wire_dtype, axis_name, perm, x):
+    """Quantize -> ppermute -> dequantize, with the transposed backward
+    hop coded the same way.
+
+    ``perm`` must be a hashable tuple of ``(src, dst)`` pairs.  The VJP is
+    deliberately NOT the true linearization of the forward round trip
+    (quantization is piecewise-constant; its exact derivative is zero
+    almost everywhere): it is the straight-through wire transpose — the
+    cotangent rides the reversed permutation through the same
+    encode/decode, which is precisely "the downlink payload is quantized
+    like the uplink payload" (EPSL's BP compression).
+    """
+    return _coded_hop(wire_dtype, axis_name, perm, x)
+
+
+def _coded_fwd(wire_dtype, axis_name, perm, x):
+    return _coded_hop(wire_dtype, axis_name, perm, x), None
+
+
+def _coded_bwd(wire_dtype, axis_name, perm, _res, g):
+    rev = tuple((dst, src) for src, dst in perm)
+    return (_coded_hop(wire_dtype, axis_name, rev, g),)
+
+
+coded_ppermute.defvjp(_coded_fwd, _coded_bwd)

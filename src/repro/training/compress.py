@@ -4,11 +4,17 @@ int8 block-quantized all-reduce payload: each gradient tensor is quantized
 per 256-element block to int8 with an fp32 scale (~4x volume reduction on
 the data-parallel reduce).  The quantization error is fed back into the next
 step's gradient (error-feedback / EF-SGD), which keeps convergence intact —
-tests assert the error-feedback invariant, and the quickstart exposes it via
-``--compress-grads``.
+tests assert the error-feedback invariant, and ``launch/train.py
+--compress-grads`` turns it on end-to-end (the step builder plumbing is
+``parallel.steps.make_lm_train_step(compress=True)``).
 
 This generalizes what EPSL [8] does for split learning (shrink the BP
-payload) to the datacenter DP axis.
+payload) to the datacenter DP axis.  The block quantizer itself
+(``quantize_blocks`` / ``dequantize_blocks``, int8 or fp8-e4m3) is shared
+with the pipeline-hop wire codec (``parallel/wire.py``), which applies the
+same scheme to the cut-activation payload WITHOUT error feedback — on the
+activation path every tick carries a different micro-batch, so there is no
+persistent tensor to feed the error back into (docs/wire.md).
 """
 from __future__ import annotations
 
@@ -17,25 +23,67 @@ import jax.numpy as jnp
 
 BLOCK = 256
 
+# Largest representable magnitude per payload dtype: int8 keeps the
+# symmetric [-127, 127] range; fp8 uses e4m3 (max 448) — enough mantissa
+# for activations/gradients once block scales absorb the dynamic range.
+_QMAX = {"int8": 127.0, "fp8": 448.0}
+
+
+def payload_dtype(wire_dtype: str):
+    """The jnp dtype a codec puts on the wire."""
+    if wire_dtype == "int8":
+        return jnp.int8
+    if wire_dtype == "fp8":
+        if not hasattr(jnp, "float8_e4m3fn"):
+            raise NotImplementedError(
+                "fp8 wire codec needs jnp.float8_e4m3fn, missing on "
+                f"installed jax {jax.__version__} — use int8 or none")
+        return jnp.float8_e4m3fn
+    raise ValueError(
+        f"unknown quantized codec {wire_dtype!r} (expected 'int8' or 'fp8')")
+
+
+def quantize_blocks(blocks, wire_dtype: str = "int8"):
+    """[..., B] fp32 blocks -> (payload int8/fp8-e4m3, fp32 scales [..., 1]).
+
+    Per-block absmax scaling: the block maximum maps to the payload
+    dtype's max magnitude.  All-zero blocks keep a clamped tiny scale so
+    decode returns exact zeros.
+    """
+    amax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    qmax = _QMAX[wire_dtype] if wire_dtype in _QMAX else None
+    if qmax is None:
+        payload_dtype(wire_dtype)  # raise the canonical error
+    scale = jnp.maximum(amax / qmax, 1e-12)
+    scaled = blocks / scale
+    if wire_dtype == "int8":
+        q = jnp.clip(jnp.round(scaled), -127, 127).astype(jnp.int8)
+    else:
+        q = scaled.astype(payload_dtype("fp8"))
+    return q, scale
+
+
+def dequantize_blocks(q, scale):
+    """Inverse of ``quantize_blocks`` (fp32 output)."""
+    return q.astype(jnp.float32) * scale
+
 
 def _pad_len(n: int) -> int:
     return (BLOCK - n % BLOCK) % BLOCK
 
 
-def quantize(g):
-    """fp32 tensor -> (int8 payload, fp32 scales per block, orig shape)."""
+def quantize(g, wire_dtype: str = "int8"):
+    """fp32 tensor -> (payload, fp32 scales per block, orig shape)."""
     flat = g.reshape(-1).astype(jnp.float32)
     pad = _pad_len(flat.shape[0])
     flat = jnp.pad(flat, (0, pad))
     blocks = flat.reshape(-1, BLOCK)
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    q, scale = quantize_blocks(blocks, wire_dtype)
     return q, scale, g.shape
 
 
 def dequantize(q, scale, shape):
-    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    flat = dequantize_blocks(q, scale).reshape(-1)
     n = 1
     for s in shape:
         n *= s

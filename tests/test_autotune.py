@@ -13,12 +13,15 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.analysis.autotune import (AutoPlan, PlanInputs, as_wireless,
-                                     choose_plan, hop_ratio, load_record,
-                                     neighbor_plans, plan_inputs_from_cfg,
+from repro.analysis.autotune import (WIRE_AUTO, AutoPlan, PlanInputs,
+                                     as_wireless, choose_plan, hop_ratio,
+                                     load_record, neighbor_plans,
+                                     plan_inputs_from_cfg,
                                      plan_inputs_from_record,
                                      plan_task_times, plan_wall_time,
-                                     schedule_ticks, tick_wall_time)
+                                     schedule_ticks, tick_wall_time,
+                                     wire_bytes_per_element,
+                                     wire_link_scale, wire_plan_sweep)
 from repro.core.schedule import simulate_c2p2sl
 from repro.sl import batch_wall_time
 
@@ -266,6 +269,195 @@ def test_pipeline_spec_auto_plan():
 
 
 # ---------------------------------------------------------------------------
+# Wire-codec awareness (parallel/wire.py's byte model in the planner).
+# ---------------------------------------------------------------------------
+
+
+def test_wire_byte_model():
+    # uncoded: the raw element width travels
+    assert wire_bytes_per_element("none", 2.0) == 2.0
+    assert wire_bytes_per_element(None, 4.0) == 4.0
+    # quantized: 1 payload byte + the amortized fp32 block scale
+    assert wire_bytes_per_element("int8", 4.0) == pytest.approx(1 + 4 / 256)
+    assert wire_bytes_per_element("fp8", 2.0) == pytest.approx(1 + 4 / 256)
+    assert wire_link_scale("none", 4.0) == 1.0
+    assert wire_link_scale("int8", 4.0) == pytest.approx(
+        (1 + 4 / 256) / 4.0)
+    with pytest.raises(ValueError, match="wire_dtype"):
+        wire_bytes_per_element("int4", 2.0)
+
+
+def test_wire_block_mirrors_codec_block():
+    """The planner's byte model must charge the EFFECTIVE block the codec
+    will actually use (largest divisor of d_model <= 256), not a flat
+    256 — narrow models pay more scale overhead per element."""
+    from repro.analysis.autotune import wire_block_for
+
+    assert wire_block_for(4096) == 256
+    assert wire_block_for(96) == 96
+    assert wire_block_for(None) == 256            # unknown width: nominal
+    # mirror of parallel.wire.wire_block on representative widths
+    from repro.parallel.wire import wire_block
+    for d in (8, 32, 96, 256, 384, 514, 4096):
+        assert wire_block_for(d) == wire_block(d), d
+    assert wire_bytes_per_element("int8", 2.0, block=32) == \
+        pytest.approx(1 + 4 / 32)
+
+
+def test_degenerate_block_makes_codec_a_net_loss():
+    """d_model = 2 * prime -> block 2 -> 3 B/elem: quantizing a bf16 wire
+    INFLATES it 1.5x, and joint enumeration must keep 'none'."""
+    assert wire_link_scale("int8", 2.0, block=2) == pytest.approx(1.5)
+    inp = PlanInputs(num_stages=2, stage_fwd_s=0.1, stage_bwd_s=0.2,
+                     link_s=0.05, hop_overhead_s=1e-4, k_cap=16, v_cap=4,
+                     num_layers=8, act_bytes=2.0, wire_block=2)
+    plan = choose_plan(inp, wire_candidates=list(WIRE_AUTO))
+    assert plan.wire_dtype == "none"
+    assert plan.wall_s <= choose_plan(inp.with_wire("int8")).wall_s
+
+
+def test_record_d_model_sets_wire_block():
+    rec = fixture_record()
+    rec["d_model"] = 96
+    inp = plan_inputs_from_record(rec)
+    assert inp.wire_block == 96
+    # explicit hint wins over the derived block
+    rec["planner_hints"]["wire_block"] = 128
+    assert plan_inputs_from_record(rec).wire_block == 128
+    # codec-compiled records un-scale with the same effective block
+    del rec["planner_hints"]["wire_block"]
+    scale = wire_link_scale("int8", 4.0, block=96)
+    rec["wire_dtype"] = "int8"
+    rec["roofline"]["coll_by_kind"]["collective-permute"] *= scale
+    assert plan_inputs_from_record(rec).link_s == pytest.approx(0.01)
+
+
+def test_cfg_path_uses_model_width_block():
+    from repro.configs import get_arch
+    cfg = get_arch("qwen1.5-4b").smoke
+    inp = plan_inputs_from_cfg(cfg, batch=16, seq=64, num_stages=2)
+    from repro.parallel.wire import wire_block
+    assert inp.wire_block == wire_block(cfg.d_model)
+
+
+def test_fixture_act_bytes_and_wire_link_shrink():
+    """Acceptance: on the checked-in fixture (f32 hop payload) the int8
+    codec shrinks the planner's billed link_s >= 3.5x, fp8 >= 1.9x."""
+    inp = fixture_inputs()
+    assert inp.act_bytes == 4.0
+    assert inp.wire_dtype == "none" and inp.wire_link_s == inp.link_s
+    shrink_int8 = inp.link_s / inp.with_wire("int8").wire_link_s
+    shrink_fp8 = inp.link_s / inp.with_wire("fp8").wire_link_s
+    assert shrink_int8 >= 3.5
+    assert shrink_fp8 >= 1.9
+
+
+def test_codec_plan_strictly_improves_and_moves_argmin():
+    """Acceptance: the codec-aware chosen plan's wall time strictly beats
+    the uncoded plan, and the cheaper link MOVES the (k, v) argmin (codec
+    enumeration is joint, not bolted on)."""
+    inp = fixture_inputs()
+    plan_none = choose_plan(inp)
+    for w in ("int8", "fp8"):
+        plan_w = choose_plan(inp.with_wire(w))
+        assert plan_w.wall_s < plan_none.wall_s, w
+        assert plan_w.wire_dtype == w
+        assert (plan_w.k, plan_w.v) != (plan_none.k, plan_none.v), \
+            "fixture should demonstrate the argmin moving under the codec"
+
+
+def test_choose_plan_wire_candidates_joint():
+    inp = fixture_inputs()
+    plan = choose_plan(inp, wire_candidates=list(WIRE_AUTO))
+    assert plan.wire_dtype == "int8"      # tie vs fp8 -> earlier candidate
+    assert plan.wall_s <= choose_plan(inp).wall_s
+    assert plan.to_dict()["wire_dtype"] == "int8"
+    assert plan.inputs.wire_dtype == "int8"
+    # pins still compose with codec enumeration
+    pinned = choose_plan(inp, k_fixed=8, wire_candidates=list(WIRE_AUTO))
+    assert pinned.k == 8 and pinned.wire_dtype in WIRE_AUTO
+    with pytest.raises(ValueError, match="wire_dtype"):
+        choose_plan(inp, wire_candidates=["int4"])
+
+
+def test_wire_plan_sweep_evidence():
+    sweep = wire_plan_sweep(fixture_inputs())
+    assert set(sweep["sweep"]) == set(WIRE_AUTO)
+    assert sweep["chosen"]["wire_dtype"] == "int8"
+    none_row = sweep["sweep"]["none"]
+    int8_row = sweep["sweep"]["int8"]
+    assert none_row["wire_link_s"] / int8_row["wire_link_s"] >= 3.5
+    assert int8_row["speedup_vs_none"] > 1.0
+    assert none_row["speedup_vs_none"] == 1.0
+
+
+def test_record_with_codec_unscales_to_baseline_link():
+    """A record COMPILED with a wire codec carries shrunk ppermute bytes;
+    extraction must recover the uncompressed link_s so re-planning is
+    fair across codecs."""
+    rec = fixture_record()
+    scale = wire_link_scale("int8", 4.0)
+    rec["wire_dtype"] = "int8"
+    rec["roofline"]["coll_by_kind"]["collective-permute"] *= scale
+    inp = plan_inputs_from_record(rec)
+    assert inp.link_s == pytest.approx(0.01)
+
+
+def test_record_dtype_fallback_for_act_bytes():
+    """Without the act_dtype_bytes hint, the record's dtype field sets the
+    element width; without either, bf16 is assumed.  'bfloat16' — the
+    config default every dryrun record carries — must resolve WITHOUT
+    np.dtype (plain numpy rejects the name in the jax-free planner CLI),
+    as must unknown strings (fall back, don't crash)."""
+    rec = fixture_record()
+    del rec["planner_hints"]["act_dtype_bytes"]
+    rec["dtype"] = "float32"
+    assert plan_inputs_from_record(rec).act_bytes == 4.0
+    rec["dtype"] = "bfloat16"
+    assert plan_inputs_from_record(rec).act_bytes == 2.0
+    rec["dtype"] = "some_future_dtype"
+    assert plan_inputs_from_record(rec).act_bytes == 2.0
+    del rec["dtype"]
+    assert plan_inputs_from_record(rec).act_bytes == 2.0
+
+
+def test_extra_hints_overlay_record_hints():
+    """Probe-measured hints overlay the record's own (explicit kwargs
+    still win): hop_overhead_s and link_bw_Bps are the calibrated keys."""
+    rec = fixture_record()
+    hints = {"hop_overhead_s": 5e-4, "link_bw_Bps": 2.0 * 3.1e9}
+    inp = plan_inputs_from_record(rec, extra_hints=hints)
+    assert inp.hop_overhead_s == pytest.approx(5e-4)
+    assert inp.link_s == pytest.approx(0.005)     # twice the bw, half the s
+    inp = plan_inputs_from_record(rec, extra_hints=hints,
+                                  hop_overhead_s=1e-3)
+    assert inp.hop_overhead_s == pytest.approx(1e-3)
+
+
+def test_plan_inputs_from_cfg_act_bytes_and_bw():
+    from repro.configs import get_arch
+    cfg = get_arch("qwen1.5-4b").smoke
+    inp = plan_inputs_from_cfg(cfg, batch=16, seq=64, num_stages=2)
+    assert inp.act_bytes == np.dtype(cfg.dtype).itemsize
+    double = plan_inputs_from_cfg(cfg, batch=16, seq=64, num_stages=2,
+                                  link_bw_Bps=2 * 3.1e9)
+    assert double.link_s < inp.link_s
+
+
+def test_pipeline_spec_auto_plan_wire():
+    from repro.parallel.pipeline import PipelineSpec
+    spec, plan = PipelineSpec.auto_plan(fixture_record(),
+                                        wire_dtype="auto")
+    assert spec.wire_dtype == plan.wire_dtype == "int8"
+    spec2, _ = PipelineSpec.auto_plan(fixture_record(), wire_dtype="fp8")
+    assert spec2.wire_dtype == "fp8"
+    spec3, plan3 = PipelineSpec.auto_plan(fixture_record())
+    assert spec3.wire_dtype == "none"
+    with pytest.raises(ValueError, match="re-pin"):
+        PipelineSpec.auto_plan(plan3, wire_dtype="int8")
+
+
+# ---------------------------------------------------------------------------
 # train.py arg resolution (the silent --pipeline-k 4 default fix).
 # ---------------------------------------------------------------------------
 
@@ -364,6 +556,77 @@ def test_resolve_bad_roofline_records_exit_cleanly(tmp_path):
                               batch=16, seq=64, plan_roofline=str(bad))
 
 
+def test_resolve_wire_flag_and_auto():
+    from repro.launch.train import resolve_pipeline_plan
+    # hand (k, v) + pinned codec: no planner run needed
+    spec, info = resolve_pipeline_plan(
+        pipeline_stages=2, pipeline_k="4", virtual_stages="2",
+        cfg=_smoke_cfg(), batch=16, seq=64, wire_dtype="int8")
+    assert spec.wire_dtype == "int8"
+    assert info["wire_source"] == "flag" and info["plan"] is None
+    # unset wire stays 'none' (source: default)
+    spec, info = resolve_pipeline_plan(
+        pipeline_stages=2, pipeline_k="4", virtual_stages=None,
+        cfg=_smoke_cfg(), batch=16, seq=64)
+    assert spec.wire_dtype == "none" and info["wire_source"] == "default"
+    # wire 'auto' forces the planner even with hand (k, v), and the codec
+    # decision rides the roofline evidence
+    spec, info = resolve_pipeline_plan(
+        pipeline_stages=2, pipeline_k="8", virtual_stages="1",
+        cfg=_smoke_cfg(), batch=16, seq=64, wire_dtype="auto",
+        plan_roofline=FIXTURE)
+    assert (spec.microbatches, spec.virtual_stages) == (8, 1)
+    assert info["wire_source"] == "auto"
+    assert spec.wire_dtype == info["plan"]["wire_dtype"] == "int8"
+
+
+def test_resolve_wire_rejects_bad_combinations():
+    from repro.launch.train import resolve_pipeline_plan
+    with pytest.raises(SystemExit, match="wire-dtype"):
+        resolve_pipeline_plan(pipeline_stages=0, pipeline_k=None,
+                              virtual_stages=None, cfg=_smoke_cfg(),
+                              batch=16, seq=64, wire_dtype="int8")
+    with pytest.raises(SystemExit, match="wire-dtype"):
+        resolve_pipeline_plan(pipeline_stages=2, pipeline_k="4",
+                              virtual_stages=None, cfg=_smoke_cfg(),
+                              batch=16, seq=64, wire_dtype="int4")
+
+
+def test_resolve_plan_hints_calibrate_overhead(tmp_path):
+    """A ppermute-probe JSON fed via plan_hints overrides the HW latency
+    constant in the planner evidence (the ROADMAP calibration item)."""
+    from repro.launch.train import resolve_pipeline_plan
+    hints = tmp_path / "probe.json"
+    hints.write_text(json.dumps(
+        {"kind": "ppermute_probe",
+         "planner_hints": {"hop_overhead_s": 7e-4}}))
+    _, info = resolve_pipeline_plan(
+        pipeline_stages=2, pipeline_k="auto", virtual_stages=None,
+        cfg=_smoke_cfg(), batch=16, seq=64, plan_roofline=FIXTURE,
+        plan_hints=str(hints))
+    assert info["plan"]["inputs"]["hop_overhead_s"] == pytest.approx(7e-4)
+    # same calibration without a roofline record (config-estimate path)
+    _, info = resolve_pipeline_plan(
+        pipeline_stages=2, pipeline_k="auto", virtual_stages=None,
+        cfg=_smoke_cfg(), batch=16, seq=64, plan_hints=str(hints))
+    assert info["plan"]["inputs"]["hop_overhead_s"] == pytest.approx(7e-4)
+    with pytest.raises(SystemExit, match="plan-hints"):
+        resolve_pipeline_plan(
+            pipeline_stages=2, pipeline_k="auto", virtual_stages=None,
+            cfg=_smoke_cfg(), batch=16, seq=64,
+            plan_hints=str(tmp_path / "missing.json"))
+
+
+def test_cli_wire_auto(tmp_path):
+    from repro.analysis.autotune import main
+    out = tmp_path / "plan.json"
+    plan = main(["--roofline", FIXTURE, "--wire", "auto",
+                 "--out", str(out)])
+    assert plan.wire_dtype == "int8"
+    doc = json.loads(out.read_text())
+    assert doc["plan"]["wire_dtype"] == "int8"
+
+
 # ---------------------------------------------------------------------------
 # Property tests (deterministic via tests/_hypothesis_stub.py when the
 # real hypothesis is absent).
@@ -420,6 +683,30 @@ def test_property_baseline_is_k1_v1(stage_ms, link_ms, k_cap):
     inp = _random_inputs(stage_ms, link_ms, 100, k_cap, 4, 8)
     plan = choose_plan(inp)
     assert plan.baseline_s == pytest.approx(plan_wall_time(inp, 1, 1))
+
+
+@settings(deadline=None, max_examples=15)
+@given(stage_ms=st.integers(1, 500), link_ms=st.integers(1, 200),
+       ovh_us=st.integers(0, 5000), k_cap=st.integers(1, 24),
+       act_bytes=st.sampled_from([2.0, 4.0]))
+def test_property_codec_enumeration_never_hurts(stage_ms, link_ms, ovh_us,
+                                                k_cap, act_bytes):
+    """For ANY measured roofline: enumerating the wire codec can only
+    improve (or tie) the chosen wall time, and every per-codec best plan
+    still dominates its own neighbors."""
+    inp = PlanInputs(num_stages=2, stage_fwd_s=stage_ms / 1e3,
+                     stage_bwd_s=2.0 * stage_ms / 1e3,
+                     link_s=link_ms / 1e3, hop_overhead_s=ovh_us / 1e6,
+                     k_cap=k_cap, v_cap=4, num_layers=8,
+                     act_bytes=act_bytes)
+    base = choose_plan(inp)
+    joint = choose_plan(inp, wire_candidates=list(WIRE_AUTO))
+    assert joint.wall_s <= base.wall_s * (1 + 1e-9)
+    for wd in WIRE_AUTO:
+        plan = choose_plan(inp.with_wire(wd))
+        for k, v in neighbor_plans(inp, plan.k, plan.v):
+            assert plan.wall_s <= plan_wall_time(
+                inp.with_wire(wd), k, v) * (1 + 1e-9), (wd, k, v)
 
 
 def test_task_times_are_finite_and_positive():

@@ -1,0 +1,442 @@
+"""Quantized wire codec for the pipeline hop (repro.parallel.wire) and its
+launcher/benchmark plumbing.
+
+Fast lane: codec round-trip bounds, block selection, probe fitting, bench
+diffing.  Slow lane (multi-device subprocess, like test_pipeline.py):
+wire_dtype='none' bit-equality with the uncoded pipeline across S/v/ragged
+k, quantized-pipeline closeness, convergence parity, and the ppermute
+probe end-to-end."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.parallel import wire
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_sub(code: str, devices: int = 8, timeout=600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Codec round-trip (fast).
+# ---------------------------------------------------------------------------
+
+
+def test_wire_block_selection():
+    """Largest divisor <= 256 of d_model; never padded."""
+    assert wire.wire_block(4096) == 256
+    assert wire.wire_block(256) == 256
+    assert wire.wire_block(96) == 96
+    assert wire.wire_block(32) == 32
+    assert wire.wire_block(384) == 192          # 384 % 256 != 0
+    assert wire.wire_block(257) == 1            # prime > 256
+    for d in (8, 96, 256, 384, 4096):
+        assert d % wire.wire_block(d) == 0
+
+
+def test_int8_roundtrip_error_bound():
+    """Per-block max error <= scale/2 = blockmax/254."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 7, 256)) * 3.0, jnp.float32)
+    y = wire.roundtrip(x, "int8")
+    assert y.dtype == x.dtype
+    blockmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    bound = blockmax / 254.0 + 1e-7
+    assert bool(jnp.all(jnp.abs(y - x) <= bound))
+
+
+def test_fp8_roundtrip_error_bound():
+    """fp8-e4m3 carries 3 mantissa bits: relative step 2^-3 per element
+    after the block scale maps the max to 448 (well inside normals)."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((3, 5, 128)), jnp.float32)
+    y = wire.roundtrip(x, "fp8")
+    assert y.dtype == x.dtype
+    # elementwise: |err| <= |x| / 16 (round-to-nearest of 3-bit mantissa)
+    # + a tiny absolute term for values far below the block max
+    blockmax = np.asarray(jnp.max(jnp.abs(x), axis=-1, keepdims=True))
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    assert np.all(err <= np.abs(np.asarray(x)) / 16.0
+                  + blockmax / 256.0 + 1e-7)
+
+
+def test_roundtrip_zeros_and_payload_dtypes():
+    z = jnp.zeros((2, 3, 64), jnp.bfloat16)
+    assert float(jnp.max(jnp.abs(wire.roundtrip(z, "int8")))) == 0.0
+    q, s = wire.encode(z, "int8")
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    assert q.shape == (2, 3, 1, 64) and s.shape == (2, 3, 1, 1)
+    q8, _ = wire.encode(z.astype(jnp.float32), "fp8")
+    assert q8.dtype == jnp.float8_e4m3fn
+    # decode restores the original trailing dim and requested dtype
+    y = wire.decode(q, s, jnp.bfloat16)
+    assert y.shape == (2, 3, 64) and y.dtype == jnp.bfloat16
+
+
+def test_validate_wire_dtype():
+    assert wire.validate_wire_dtype(None) == "none"
+    assert wire.validate_wire_dtype(" INT8 ") == "int8"
+    with pytest.raises(ValueError, match="wire_dtype"):
+        wire.validate_wire_dtype("int4")
+
+
+def test_coded_ppermute_vjp_quantizes_cotangent():
+    """The custom_vjp backward rule codes the cotangent: under a 1-device
+    identity permutation the forward IS roundtrip(x) and the pullback of
+    g IS roundtrip(g) — the straight-through wire transpose, not g."""
+    from repro.parallel import compat
+    from repro.parallel.compat import PartitionSpec as P
+
+    mesh = compat.make_mesh((1,), ("pod",))
+    fn = compat.shard_map(
+        lambda x: wire.coded_ppermute("int8", "pod", ((0, 0),), x),
+        mesh, in_specs=(P(),), out_specs=P(), check=False)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, 64)), jnp.float32)
+    gbar = jnp.asarray(rng.standard_normal((2, 64)), jnp.float32)
+    y, vjp = jax.vjp(fn, x)
+    (gx,) = vjp(gbar)
+    assert np.array_equal(np.asarray(y),
+                          np.asarray(wire.roundtrip(x, "int8")))
+    assert np.array_equal(np.asarray(gx),
+                          np.asarray(wire.roundtrip(gbar, "int8")))
+    assert not np.array_equal(np.asarray(gx), np.asarray(gbar))
+
+
+def test_pipeline_spec_normalizes_wire_at_construction():
+    """Sloppy spellings must not slip past the coded-vs-raw branch: the
+    spec normalizes at construction, so ' INT8 ' codes the hop and
+    'NONE' takes the raw-ppermute branch."""
+    from repro.parallel.pipeline import PipelineSpec
+
+    assert PipelineSpec(wire_dtype=" INT8 ").wire_dtype == "int8"
+    assert PipelineSpec(wire_dtype="NONE").wire_dtype == "none"
+    assert PipelineSpec(wire_dtype=None).wire_dtype == "none"
+
+
+def test_dryrun_skip_done_key_includes_all_knobs():
+    """--skip-done identity must cover every compile-changing knob: a
+    codec (or interleave) re-run of an already-lowered cell is NOT done.
+    Records predating a knob read as its default."""
+    from repro.launch.dryrun import cell_key
+
+    base = cell_key("a", "s", "16x16", 8, 1, "none")
+    # legacy record without the new fields == new run at the defaults
+    assert cell_key("a", "s", "16x16", 8, None, None) == base
+    assert cell_key("a", "s", "16x16", 8, 1, "int8") != base
+    assert cell_key("a", "s", "16x16", 8, 2, "none") != base
+
+
+def test_pipeline_spec_validates_wire():
+    from repro.models import LM, LMConfig
+    from repro.parallel.compat import make_mesh
+    from repro.parallel.pipeline import PipelineSpec, make_pipelined_loss
+    from repro.data import lm_batch_for
+
+    cfg = LMConfig(name="t", num_layers=2, d_model=32, n_heads=4, n_kv=2,
+                   d_ff=64, vocab=128, dtype="float32")
+    m = LM(cfg)
+    p = m.init(jax.random.key(0))
+    batch = lm_batch_for(cfg, 4, 8)
+    mesh = make_mesh((1,), ("pod",))
+    spec = PipelineSpec(num_stages=1, microbatches=2, wire_dtype="int4")
+    loss_fn = make_pipelined_loss(m, spec, mesh=mesh)
+    with pytest.raises(ValueError, match="wire_dtype"):
+        loss_fn(p, batch)
+
+
+def test_s1_pipeline_ignores_codec():
+    """S=1 has no ppermute, so every codec is a no-op there — the coded
+    spec must reproduce the uncoded loss exactly."""
+    from repro.data import lm_batch_for
+    from repro.models import LM, LMConfig
+    from repro.parallel.compat import make_mesh, mesh_context
+    from repro.parallel.pipeline import PipelineSpec, make_pipelined_loss
+
+    cfg = LMConfig(name="t", num_layers=2, d_model=32, n_heads=4, n_kv=2,
+                   d_ff=64, vocab=128, dtype="float32")
+    m = LM(cfg)
+    p = m.init(jax.random.key(0))
+    batch = lm_batch_for(cfg, 4, 8)
+    mesh = make_mesh((1,), ("pod",))
+    losses = {}
+    for w in ("none", "int8"):
+        spec = PipelineSpec(num_stages=1, microbatches=2, wire_dtype=w)
+        with mesh_context(mesh):
+            losses[w] = float(jax.jit(
+                make_pipelined_loss(m, spec, mesh=mesh))(p, batch)[0])
+    assert losses["none"] == losses["int8"]
+
+
+# ---------------------------------------------------------------------------
+# ppermute probe fitting + bench diff (fast).
+# ---------------------------------------------------------------------------
+
+
+def test_probe_fit_recovers_overhead_and_bw():
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.ppermute_probe import fit_overhead
+    finally:
+        sys.path.remove(ROOT)
+    bw, ovh = 2.5e9, 40e-6
+    pts = [(b, ovh + b / bw) for b in (1e5, 1e6, 5e6, 2e7)]
+    fit_ovh, fit_bw = fit_overhead(pts)
+    assert fit_ovh == pytest.approx(ovh, rel=1e-6)
+    assert fit_bw == pytest.approx(bw, rel=1e-6)
+    # negative intercepts clamp to zero instead of going nonsensical
+    fit_ovh, _ = fit_overhead([(b, b / bw) for b in (1e5, 1e6, 1e7)])
+    assert fit_ovh >= 0.0
+    with pytest.raises(ValueError, match="two"):
+        fit_overhead([(1e6, 1e-3)])
+
+
+def test_bench_diff_rows():
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.run import diff_rows
+    finally:
+        sys.path.remove(ROOT)
+    base = [{"name": "pipeline_plan",
+             "result": {"chosen_wire": "int8", "wall": 1.0,
+                        "by": {"a": [1, 2]}}},
+            {"name": "only_in_base", "result": {"x": 1}}]
+    good = [{"name": "pipeline_plan",
+             "result": {"chosen_wire": "int8", "wall": 1.0 + 1e-9,
+                        "by": {"a": [1, 2]}}}]
+    assert diff_rows(base, good) == []
+    bad = [{"name": "pipeline_plan",
+            "result": {"chosen_wire": "fp8", "wall": 1.5,
+                       "by": {"a": [1]}}}]
+    fails = diff_rows(base, bad)
+    assert len(fails) == 3
+    assert any("chosen_wire" in f for f in fails)
+
+
+def test_bench_diff_no_overlap_fails_loudly(tmp_path):
+    """A drift gate that matched nothing must FAIL, not pass vacuously
+    (renamed bench / --only drift would otherwise disarm the CI check)."""
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.run import main as run_main
+    finally:
+        sys.path.remove(ROOT)
+    baseline = tmp_path / "base.json"
+    baseline.write_text(json.dumps(
+        {"rows": [{"name": "renamed_bench", "result": {"x": 1}}]}))
+    with pytest.raises(SystemExit) as exc:
+        run_main(["--only", "pipeline_plan", "--diff", str(baseline)])
+    assert exc.value.code == 1
+
+
+def test_committed_bench_baseline_matches_current_planner():
+    """The checked-in benchmarks/BENCH_pipeline.json must stay in sync
+    with the live planner — the same guarantee the CI diff job enforces,
+    asserted in tier-1 so a planner change cannot land without
+    regenerating the baseline."""
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.pipeline_plan import main as bench_main
+        from benchmarks.run import diff_rows
+    finally:
+        sys.path.remove(ROOT)
+    baseline_path = os.path.join(ROOT, "benchmarks", "BENCH_pipeline.json")
+    with open(baseline_path) as f:
+        base = json.load(f)
+    result = json.loads(json.dumps(
+        bench_main(quick=True),
+        default=lambda o: o.tolist() if hasattr(o, "tolist") else str(o)))
+    fails = diff_rows(base["rows"],
+                      [{"name": "pipeline_plan", "result": result}])
+    assert fails == [], fails
+    assert result["link_shrink_int8"] >= 3.5
+    assert result["link_shrink_fp8"] >= 1.9
+
+
+# ---------------------------------------------------------------------------
+# Multi-device subprocess lane (slow).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_wire_none_bit_identical_across_s_v_ragged_k():
+    """wire_dtype='none' must be BIT-identical to the uncoded (PR-4)
+    pipeline — same loss, same grads, max|diff| == 0 exactly — across
+    stage counts, interleave depths and ragged k."""
+    out = run_sub("""
+        import jax, json
+        import jax.numpy as jnp
+        from repro.models import LM, LMConfig
+        from repro.data import lm_batch_for
+        from repro.parallel.compat import make_mesh, mesh_context
+        from repro.parallel.pipeline import PipelineSpec, make_pipelined_loss
+
+        cfg = LMConfig(name='t', num_layers=8, d_model=32, n_heads=4, n_kv=2,
+                       d_ff=64, vocab=128, dtype='float32')
+        m = LM(cfg)
+        p = m.init(jax.random.key(1))
+        batch = lm_batch_for(cfg, 10, 16)
+        results = {}
+        for (S, v, k, dshape) in [(2, 1, 5, (2, 2, 2)),
+                                  (2, 2, 4, (2, 2, 2)),
+                                  (4, 2, 8, (4, 2, 1))]:
+            mesh = make_mesh(dshape, ("pod", "data", "model"))
+            outs = {}
+            for w in ("none", "explicit-default"):
+                if w == "none":
+                    spec = PipelineSpec(num_stages=S, microbatches=k,
+                                        virtual_stages=v, wire_dtype="none")
+                else:
+                    spec = PipelineSpec(num_stages=S, microbatches=k,
+                                        virtual_stages=v)
+                loss_fn = make_pipelined_loss(m, spec, mesh=mesh)
+                with mesh_context(mesh):
+                    loss, _ = jax.jit(loss_fn)(p, batch)
+                    g = jax.jit(jax.grad(lambda p: loss_fn(p, batch)[0]))(p)
+                outs[w] = (float(loss), g)
+            la, ga = outs["none"]
+            lb, gb = outs["explicit-default"]
+            gd = max(jax.tree.leaves(jax.tree.map(
+                lambda a, b: float(jnp.max(jnp.abs(a - b))), ga, gb)))
+            results[f"S{S}v{v}k{k}"] = {"dl": la - lb, "gd": gd}
+        print(json.dumps(results))
+    """, devices=8)
+    res = json.loads(out.strip().splitlines()[-1])
+    for cell, r in res.items():
+        assert r["dl"] == 0.0, cell
+        assert r["gd"] == 0.0, cell
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("wdt", ["int8", "fp8"])
+def test_quantized_pipeline_close_to_reference(wdt):
+    """int8/fp8 wire: the loss tracks the unpipelined reference closely
+    (block-quantization noise only) while the gradients provably went
+    through the codec (non-zero deviation)."""
+    out = run_sub(f"""
+        import jax, json
+        import jax.numpy as jnp
+        from repro.models import LM, LMConfig
+        from repro.data import lm_batch_for
+        from repro.parallel.compat import make_mesh, mesh_context
+        from repro.parallel.pipeline import PipelineSpec, make_pipelined_loss
+
+        cfg = LMConfig(name='t', num_layers=8, d_model=32, n_heads=4, n_kv=2,
+                       d_ff=64, vocab=128, dtype='float32')
+        m = LM(cfg)
+        p = m.init(jax.random.key(1))
+        batch = lm_batch_for(cfg, 8, 16)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        loss_ref, _ = m.forward(p, batch)
+        g_ref = jax.grad(lambda p: m.forward(p, batch)[0])(p)
+        spec = PipelineSpec(num_stages=2, microbatches=4, virtual_stages=2,
+                            wire_dtype="{wdt}")
+        loss_fn = make_pipelined_loss(m, spec, mesh=mesh)
+        with mesh_context(mesh):
+            loss_q, _ = jax.jit(loss_fn)(p, batch)
+            g_q = jax.jit(jax.grad(lambda p: loss_fn(p, batch)[0]))(p)
+        rel = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))
+                               / (jnp.max(jnp.abs(b)) + 1e-8)), g_q, g_ref)
+        print(json.dumps({{"loss_ref": float(loss_ref),
+                           "loss_q": float(loss_q),
+                           "max_rel_gdiff": max(jax.tree.leaves(rel))}}))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert abs(res["loss_q"] - res["loss_ref"]) < 5e-3 \
+        * max(1.0, abs(res["loss_ref"]))
+    assert 0.0 < res["max_rel_gdiff"] < 0.25
+
+
+@pytest.mark.slow
+def test_quantized_wire_convergence_parity():
+    """30 adamw steps through the 2-stage pipeline: int8 and fp8 wire
+    land within a whisker of the uncoded loss trajectory (the acceptance
+    bar for shipping a lossy wire)."""
+    out = run_sub("""
+        import jax, json
+        import jax.numpy as jnp
+        from repro.data import TokenTaskConfig, token_batches
+        from repro.models import LM, LMConfig
+        from repro.parallel.compat import make_mesh, mesh_context
+        from repro.parallel.pipeline import PipelineSpec, make_pipelined_loss
+        from repro.parallel.steps import make_lm_train_step
+        from repro.training.optim import adamw
+
+        cfg = LMConfig(name='t', num_layers=4, d_model=32, n_heads=4, n_kv=2,
+                       d_ff=64, vocab=128, dtype='float32')
+        m = LM(cfg)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        finals = {}
+        for w in ("none", "int8", "fp8"):
+            opt = adamw(1e-2)
+            params = m.init(jax.random.key(0))
+            state = {"params": params, "opt_state": opt.init(params),
+                     "step": jnp.zeros((), jnp.int32)}
+            spec = PipelineSpec(num_stages=2, microbatches=4, wire_dtype=w)
+            step = jax.jit(make_lm_train_step(m, opt, pipeline=spec,
+                                              mesh=mesh))
+            it = token_batches(TokenTaskConfig(vocab=cfg.vocab), 8, 16,
+                               seed=3)
+            with mesh_context(mesh):
+                first = None
+                for _ in range(30):
+                    state, mets = step(state, next(it))
+                    if first is None:
+                        first = float(mets["loss"])
+            finals[w] = {"first": first, "final": float(mets["loss"])}
+        print(json.dumps(finals))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    ref = res["none"]
+    assert ref["final"] < ref["first"] - 0.5          # training actually moves
+    for w in ("int8", "fp8"):
+        assert res[w]["final"] < res[w]["first"] - 0.5, w
+        assert abs(res[w]["final"] - ref["final"]) < 0.05 \
+            * max(1.0, abs(ref["final"])), (w, res)
+
+
+@pytest.mark.slow
+def test_ppermute_probe_end_to_end(tmp_path):
+    """The probe runs on forced host devices, emits planner_hints, and
+    plan_inputs_from_record consumes them (hop_overhead_s + link bw)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = SRC
+    out_path = tmp_path / "probe.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.ppermute_probe",
+         "--sizes-kib", "64,512,2048", "--repeats", "3",
+         "--out", str(out_path)],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    doc = json.loads(out_path.read_text())
+    hints = doc["planner_hints"]
+    assert hints["hop_overhead_s"] >= 0.0
+    assert hints["link_bw_Bps"] > 0.0
+    assert len(doc["points_bytes_seconds"]) == 3
+
+    from repro.analysis.autotune import plan_inputs_from_record
+    fixture = os.path.join(os.path.dirname(__file__), "fixtures",
+                           "roofline_smoke.json")
+    with open(fixture) as f:
+        record = json.load(f)
+    inp = plan_inputs_from_record(record, extra_hints=hints)
+    assert inp.hop_overhead_s == pytest.approx(hints["hop_overhead_s"])
