@@ -98,9 +98,9 @@ def main():
     ap.add_argument("--pipeline-v", type=int, default=1,
                     help="interleaved virtual stages per pipeline stage")
     ap.add_argument("--wire-dtype", default="none",
-                    choices=["none", "int8", "fp8"],
                     help="wire codec on the pipeline hop "
-                         "(parallel/wire.py)")
+                         "(parallel/wire.py): none|int8|fp8, optionally "
+                         "'+topk<frac>' e.g. int8+topk0.25")
     ap.add_argument("--pipeline-auto", action="store_true",
                     help="run the roofline auto-planner on the lowered "
                          "cell and record hand-picked vs auto-picked "

@@ -79,7 +79,8 @@ def main(argv=None):
     quick = not args.full
 
     from benchmarks import (ao_convergence, fig3_accuracy, fig4_ue_scaling,
-                            fig5_bandwidth, pipeline_plan, roofline_report)
+                            fig5_bandwidth, pipeline_plan, roofline_report,
+                            wire_codec)
 
     benches = {
         "fig4_ue_scaling": fig4_ue_scaling.main,
@@ -88,6 +89,7 @@ def main(argv=None):
         "fig3_accuracy": fig3_accuracy.main,
         "roofline_report": roofline_report.main,
         "pipeline_plan": pipeline_plan.main,
+        "wire_codec": wire_codec.main,
     }
     selected = list(benches)
     if args.only:
@@ -150,10 +152,18 @@ def main(argv=None):
             if hasattr(o, "tolist") else str(o)))
         failures = diff_rows(base.get("rows", []), new_rows,
                              rtol=args.diff_rtol)
-        shared = sorted({r["name"] for r in base.get("rows", [])
-                         if isinstance(r.get("result"), dict)}
-                        & {r["name"] for r in new_rows
-                           if isinstance(r.get("result"), dict)})
+        base_names = {r["name"] for r in base.get("rows", [])
+                      if isinstance(r.get("result"), dict)}
+        new_names = {r["name"] for r in new_rows
+                     if isinstance(r.get("result"), dict)}
+        shared = sorted(base_names & new_names)
+        new_only = sorted(new_names - base_names)
+        if new_only:
+            # a bench added since the baseline was committed: fine (it
+            # starts being diffed once the baseline is regenerated), but
+            # say so — silence here would look like coverage it isn't
+            print(f"note: not in baseline, not diffed: "
+                  f"{', '.join(new_only)}")
         if not shared:
             # a drift gate that matched nothing is a broken gate, not a
             # passing one (renamed bench, --only drift, non-dict result)

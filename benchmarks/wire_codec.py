@@ -1,0 +1,142 @@
+"""Wire-codec microbench: fused Pallas encode/decode vs the jnp reference.
+
+Two jobs:
+
+  1. a deterministic ``result`` dict for ``run.py --diff``: fused-vs-jnp
+     bit-parity booleans under jit, payload shapes/dtypes, and the
+     planner's wire byte model per case — no timings (those are
+     machine-dependent, and ``--diff`` compares the whole dict);
+  2. measured throughput on stdout for both impls, ending in a
+     ``codec_s_per_byte`` planner hint — the encode+decode seconds per
+     payload byte that ``autotune.plan_inputs_from_record`` bills against
+     a codec's link saving (paste it into ``planner_hints`` /
+     ``--plan-hints``; see docs/autotune.md).
+
+The parity contract is jit-vs-jit: both paths run under ``jax.jit`` (the
+fused wrappers in ``kernels/ops.py`` are jitted already) because eager
+XLA compiles the ``/qmax`` scale division differently (reciprocal
+multiply) than the jitted kernel — a ~1e-9 scale wobble that is not a
+codec bug.  Off-TPU the fused kernels run in Pallas interpret mode.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _bits_equal(a, b) -> bool:
+    a, b = np.asarray(a), np.asarray(b)
+    return (a.shape == b.shape and a.dtype == b.dtype
+            and a.tobytes() == b.tobytes())
+
+
+def _time_codec(fn, x, repeats: int) -> float:
+    """Best-of-N seconds for one encode+decode round trip of ``x``."""
+    fn(x)  # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(x)
+        import jax
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(quick: bool = True):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.autotune import (wire_bytes_per_element,
+                                         wire_bytes_per_element_bwd)
+    from repro.parallel import wire
+
+    try:
+        wire.validate_wire_dtype("fp8")
+        have_fp8 = True
+    except NotImplementedError:
+        have_fp8 = False
+
+    # -- bit-parity + format evidence (the deterministic result) ----------
+    cases = [("int8", jnp.bfloat16, (3, 5, 384)),
+             ("int8", jnp.float32, (15, 2560))]
+    if have_fp8:
+        cases.append(("fp8", jnp.bfloat16, (4, 64, 256)))
+
+    result = {"backend": jax.default_backend(), "cases": {}}
+    for wd, dtype, shape in cases:
+        key = f"{wd}/{np.dtype(dtype).name}/" + "x".join(map(str, shape))
+        rng = np.random.default_rng(hash(key) % (2 ** 31))
+        x = jnp.asarray(rng.standard_normal(shape), dtype)
+        enc_jnp = jax.jit(lambda x, w=wd: wire.encode(x, w, impl="jnp"))
+        enc_fused = jax.jit(lambda x, w=wd: wire.encode(x, w, impl="fused"))
+        qj, sj = enc_jnp(x)
+        qf, sf = enc_fused(x)
+        dec_jnp = jax.jit(lambda q, s, d=dtype:
+                          wire.decode(q, s, d, impl="jnp"))
+        dec_fused = jax.jit(lambda q, s, d=dtype:
+                            wire.decode(q, s, d, impl="fused"))
+        d = shape[-1]
+        itemsize = jnp.dtype(dtype).itemsize
+        result["cases"][key] = {
+            "wire_block": wire.wire_block(d),
+            "payload_dtype": str(np.asarray(qj).dtype),
+            "payload_shape": list(qj.shape),
+            "scale_shape": list(sj.shape),
+            "encode_parity": (_bits_equal(qj, qf) and _bits_equal(sj, sf)),
+            "decode_parity": _bits_equal(dec_jnp(qj, sj), dec_fused(qj, sj)),
+            "bytes_per_elt_fwd": wire_bytes_per_element(
+                wd, itemsize, wire.wire_block(d)),
+            "bytes_per_elt_bwd_topk0.25": wire_bytes_per_element_bwd(
+                f"{wd}+topk0.25", itemsize, wire.wire_block(d), d_model=d),
+        }
+        print(f"  {key:26s} block {wire.wire_block(d):3d}  "
+              f"parity enc={result['cases'][key]['encode_parity']} "
+              f"dec={result['cases'][key]['decode_parity']}")
+
+    # top-k payload format (backward-hop codec) on a fixed case
+    d = 512
+    rng = np.random.default_rng(7)
+    g = jnp.asarray(rng.standard_normal((6, d)), jnp.float32)
+    q, idx, scale = wire.topk_encode(g, "int8+topk0.25")
+    dec = wire.topk_decode(q, idx, scale, d, jnp.float32)
+    kept = np.take_along_axis(np.asarray(g), np.asarray(idx, np.int64), -1)
+    result["topk"] = {
+        "kk": int(q.shape[-1]),
+        "idx_dtype": str(np.asarray(idx).dtype),
+        "scale_shape": list(scale.shape),
+        # the decode reproduces exactly the kept entries (quantized) and
+        # nothing else: the dropped mass is what error feedback carries
+        "kept_mass_frac_q01": round(
+            float(np.linalg.norm(kept)) ** 2
+            / float(np.linalg.norm(np.asarray(g))) ** 2, 1),
+        "decode_support_matches": bool(
+            (np.count_nonzero(np.asarray(dec), axis=-1)
+             <= q.shape[-1]).all()),
+    }
+    print(f"  topk0.25 d={d}: kk={result['topk']['kk']} "
+          f"idx={result['topk']['idx_dtype']}")
+
+    # -- throughput + the codec_s_per_byte planner hint (stdout only) -----
+    shape = (64, 128, 2560) if not quick else (16, 128, 2560)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(shape), jnp.bfloat16)
+    nbytes = x.size * x.dtype.itemsize
+    repeats = 10 if not quick else 3
+    times = {}
+    for impl in ("jnp", "fused"):
+        rt = jax.jit(lambda x, i=impl: wire.roundtrip(x, "int8", i))
+        times[impl] = _time_codec(rt, x, repeats)
+        print(f"  int8 roundtrip [{impl:5s}] {shape}: "
+              f"{times[impl] * 1e3:8.3f} ms  "
+              f"({nbytes / times[impl] / 2 ** 30:6.2f} GiB/s)")
+    # off-TPU the jnp path is what production runs (wire._impl('auto')),
+    # so the hint follows the faster of the two — on TPU that is fused
+    hint = min(times.values()) / nbytes
+    print(f'  planner_hints: {{"codec_s_per_byte": {hint:.3e}}}')
+    return result
+
+
+if __name__ == "__main__":
+    main()

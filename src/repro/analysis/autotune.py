@@ -83,9 +83,11 @@ def hop_ratio(num_stages: int, virtual_stages: int) -> float:
 # ---------------------------------------------------------------------------
 
 # Codec enumeration order for ``wire_dtype='auto'``: ties keep the first
-# entry, so an uncoded hop wins unless quantizing strictly pays, and int8
-# (better-conditioned with block scales) wins a tie against fp8.
-WIRE_AUTO = ("none", "int8", "fp8")
+# entry, so an uncoded hop wins unless quantizing strictly pays, int8
+# (better-conditioned with block scales) wins a tie against fp8, and the
+# sparsified gradient hop must STRICTLY beat every dense codec to be
+# chosen (it is lossier and carries EF state).
+WIRE_AUTO = ("none", "int8", "fp8", "int8+topk0.25")
 
 # Nominal quantization block (parallel/wire.py picks the largest divisor
 # of d_model <= this); the fp32 per-block scale amortizes to 4/block
@@ -107,9 +109,44 @@ def wire_block_for(d_model, block: int = WIRE_BLOCK) -> int:
     return b
 
 
+def _parse_wire(wire_dtype):
+    """Codec name -> ``(base, topk_frac | None)`` — numpy-only mirror of
+    ``parallel.wire.parse_wire_dtype`` (that module imports jax; the
+    planner must run before any accelerator stack exists).  Same grammar,
+    same normalization: ``frac >= 1`` IS the dense base codec."""
+    w = "none" if wire_dtype is None else str(wire_dtype).strip().lower()
+    base, sep, suffix = w.partition("+")
+    frac = None
+    if sep:
+        if not suffix.startswith("topk"):
+            raise ValueError(
+                f"unknown wire_dtype {wire_dtype!r} (expected "
+                "'<base>+topk<frac>', e.g. 'int8+topk0.25')")
+        try:
+            frac = float(suffix[len("topk"):])
+        except ValueError:
+            raise ValueError(
+                f"wire_dtype {wire_dtype!r}: top-k fraction "
+                f"{suffix[len('topk'):]!r} is not a number")
+        if not frac > 0.0:
+            raise ValueError(
+                f"wire_dtype {wire_dtype!r}: top-k fraction must be > 0")
+        if frac >= 1.0:
+            frac = None
+    if base not in ("none", "int8", "fp8"):
+        raise ValueError(
+            f"unknown wire_dtype {wire_dtype!r} (expected one of "
+            f"('none', 'int8', 'fp8') or '<base>+topk<frac>')")
+    if frac is not None and base == "none":
+        raise ValueError(
+            f"wire_dtype {wire_dtype!r}: top-k rides a quantized payload "
+            "— use 'int8+topk<frac>' or 'fp8+topk<frac>'")
+    return base, frac
+
+
 def wire_bytes_per_element(wire_dtype: str, act_bytes: float,
                            block: int = WIRE_BLOCK) -> float:
-    """Wire bytes one activation element costs under a codec.
+    """Wire bytes one activation element costs on the FORWARD hop.
 
     ``act_bytes`` is the uncompressed element width (2 for bf16, 4 for
     fp32 — what the raw ppermute ships).  Both quantized codecs put one
@@ -117,25 +154,56 @@ def wire_bytes_per_element(wire_dtype: str, act_bytes: float,
     ``block`` is the EFFECTIVE codec block (``wire_block_for(d_model)``
     — a d_model not divisible by 256 pays more scale overhead, and a
     degenerate block can make quantizing a net loss, which the planner
-    must see).
+    must see).  A ``+topk`` codec sparsifies only the BACKWARD hop
+    (``wire_bytes_per_element_bwd``); its forward hop ships the dense
+    base payload, which is what this function prices.
     """
-    w = "none" if wire_dtype is None else str(wire_dtype)
-    if w == "none":
+    base, _frac = _parse_wire(wire_dtype)
+    if base == "none":
         return float(act_bytes)
-    if w in ("int8", "fp8"):
-        return 1.0 + 4.0 / max(1, int(block))
-    raise ValueError(
-        f"unknown wire_dtype {wire_dtype!r} (expected one of "
-        f"{('none',) + ('int8', 'fp8')})")
+    return 1.0 + 4.0 / max(1, int(block))
+
+
+def wire_bytes_per_element_bwd(wire_dtype: str, act_bytes: float,
+                               block: int = WIRE_BLOCK,
+                               d_model=None) -> float:
+    """Wire bytes one activation-GRADIENT element costs on the backward
+    hop.  Dense codecs are direction-symmetric; a ``+topk<frac>`` codec
+    ships ``frac*d`` base-quantized values + their int16 indices (int32
+    above 32767 columns) + one fp32 per-row scale:
+    ``frac*(1 + idx_bytes) + 4/d`` bytes/element.  Unknown ``d_model``
+    assumes int16 indices and drops the (tiny) amortized-scale term.
+
+    At a DEGENERATE block (dense codec >= raw, the runtime's
+    ``wire.codec_net_loss`` condition) the EF hop falls back to the raw
+    payload on both directions, so the top-k saving never materializes —
+    bill the dense bytes there (same pessimism as the forward model), so
+    joint enumeration keeps 'none'."""
+    base, frac = _parse_wire(wire_dtype)
+    dense = wire_bytes_per_element(wire_dtype, act_bytes, block)
+    if frac is None or dense >= float(act_bytes):
+        return dense
+    d = None if d_model is None or int(d_model) <= 0 else int(d_model)
+    idx_bytes = 2.0 if d is None or d <= 32767 else 4.0
+    scale_amort = 4.0 / d if d else 0.0
+    return frac * (1.0 + idx_bytes) + scale_amort
 
 
 def wire_link_scale(wire_dtype: str, act_bytes: float,
                     block: int = WIRE_BLOCK) -> float:
-    """Multiplier on the uncompressed link time under a codec (< 1 for
-    int8/fp8 at healthy blocks; exactly 1 for 'none'; can exceed 1 for
-    degenerate blocks, where the planner should keep 'none')."""
+    """Multiplier on the uncompressed FORWARD link time under a codec
+    (< 1 for int8/fp8 at healthy blocks; exactly 1 for 'none'; can exceed
+    1 for degenerate blocks, where the planner should keep 'none')."""
     return wire_bytes_per_element(wire_dtype, act_bytes, block) \
         / float(act_bytes)
+
+
+def wire_link_scale_bwd(wire_dtype: str, act_bytes: float,
+                        block: int = WIRE_BLOCK, d_model=None) -> float:
+    """Backward-hop counterpart of ``wire_link_scale`` (smaller than the
+    forward scale under a ``+topk`` codec; identical for dense ones)."""
+    return wire_bytes_per_element_bwd(wire_dtype, act_bytes, block,
+                                      d_model) / float(act_bytes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,7 +220,13 @@ class PlanInputs:
     — the term that makes large k and large v non-free and gives the
     planner an interior optimum.  ``wire_dtype`` / ``act_bytes`` model
     the hop codec: the billed link time is ``wire_link_s`` =
-    ``link_s * wire_link_scale(wire_dtype, act_bytes)``.
+    ``link_s * wire_link_scale(wire_dtype, act_bytes)`` on the forward
+    hop and ``wire_link_bwd_s`` on the backward one (smaller under a
+    ``+topk`` codec).  ``codec_s_per_byte`` (measured by
+    benchmarks/wire_codec.py) bills the encode+decode COMPUTE of a coded
+    hop: ``codec_s = act_hop_bytes * codec_s_per_byte`` seconds per
+    full-batch hop are added to every coded comm leg, so a codec is only
+    chosen when its link-time saving exceeds its compute cost.
     """
 
     num_stages: int
@@ -170,13 +244,35 @@ class PlanInputs:
     wire_dtype: str = "none"     # hop codec billed by the objective
     act_bytes: float = 2.0       # uncompressed element width (bf16 default)
     wire_block: int = WIRE_BLOCK  # effective codec block (wire_block_for)
+    codec_s_per_byte: float = 0.0  # encode+decode seconds per payload byte
+    act_hop_bytes: float = 0.0   # uncompressed full-batch hop volume (B)
+    d_model: int | None = None   # hop row width (top-k index/scale model)
 
     @property
     def wire_link_s(self) -> float:
-        """Link seconds of one full-batch hop as billed under the codec."""
+        """Link seconds of one full-batch FORWARD hop as billed under the
+        codec (a ``+topk`` codec's forward hop is its dense base)."""
         return self.link_s * wire_link_scale(self.wire_dtype,
                                              self.act_bytes,
                                              self.wire_block)
+
+    @property
+    def wire_link_bwd_s(self) -> float:
+        """Link seconds of one full-batch BACKWARD (gradient) hop —
+        smaller than ``wire_link_s`` under a ``+topk`` codec."""
+        return self.link_s * wire_link_scale_bwd(self.wire_dtype,
+                                                 self.act_bytes,
+                                                 self.wire_block,
+                                                 self.d_model)
+
+    @property
+    def codec_s(self) -> float:
+        """Encode+decode compute seconds of one full-batch coded hop
+        (0 for 'none', and 0 when no throughput was measured)."""
+        base, _frac = _parse_wire(self.wire_dtype)
+        if base == "none":
+            return 0.0
+        return float(self.act_hop_bytes) * float(self.codec_s_per_byte)
 
     def with_stages(self, num_stages: int) -> "PlanInputs":
         if num_stages == self.num_stages:
@@ -189,8 +285,8 @@ class PlanInputs:
             stage_bwd_s=self.stage_bwd_s * scale)
 
     def with_wire(self, wire_dtype: str) -> "PlanInputs":
-        wire_bytes_per_element(wire_dtype, self.act_bytes)  # validate
-        w = "none" if wire_dtype is None else str(wire_dtype)
+        base, frac = _parse_wire(wire_dtype)   # validate + normalize
+        w = base if frac is None else f"{base}+topk{frac:g}"
         if w == self.wire_dtype:
             return self
         return dataclasses.replace(self, wire_dtype=w)
@@ -216,6 +312,11 @@ class PlanInputs:
             "act_bytes": self.act_bytes,
             "wire_block": self.wire_block,
             "wire_link_s": self.wire_link_s,
+            "wire_link_bwd_s": self.wire_link_bwd_s,
+            "codec_s_per_byte": self.codec_s_per_byte,
+            "codec_s": self.codec_s,
+            "act_hop_bytes": self.act_hop_bytes,
+            "d_model": self.d_model,
             "hop_overhead_s": self.hop_overhead_s,
             "k_cap": self.k_cap,
             "v_cap": self.v_cap,
@@ -229,17 +330,22 @@ def plan_task_times(inp: PlanInputs, k: int, v: int) -> TaskTimes:
 
     The uplink/downlink legs carry the v-interleave hop inflation: a
     micro-batch crosses the boundary ``S*v - 1`` times instead of
-    ``S - 1``, each hop paying bandwidth (codec-billed volume / k) plus
-    the fixed per-message overhead.
+    ``S - 1``, each hop paying bandwidth (codec-billed volume / k, per
+    direction — a ``+topk`` codec's downlink is cheaper than its uplink)
+    plus the fixed per-message overhead plus the codec's encode+decode
+    compute share (``codec_s / k``) — the term that stops the planner
+    from picking a codec whose compute costs more than its link saving.
     """
     h = hop_ratio(inp.num_stages, v)
-    leg = h * (inp.wire_link_s / k + inp.hop_overhead_s)
+    codec = inp.codec_s / k
+    up = h * (inp.wire_link_s / k + inp.hop_overhead_s + codec)
+    down = h * (inp.wire_link_bwd_s / k + inp.hop_overhead_s + codec)
     return TaskTimes(
         ue_fwd=np.array([inp.stage_fwd_s / k]),
-        uplink=np.array([leg]),
+        uplink=np.array([up]),
         bs_fwd=inp.stage_fwd_s / k,
         bs_bwd=inp.stage_bwd_s / k,
-        downlink=np.array([leg]),
+        downlink=np.array([down]),
         ue_bwd=np.array([inp.stage_bwd_s / k]),
     )
 
@@ -251,17 +357,27 @@ def as_wireless(inp: PlanInputs, k: int, v: int):
 
     Construction: one UE with f=1 FLOP/s, unit frame/slot/rates, batch
     ``B = k``; per-sample costs are the batch costs / B, and the cut
-    bytes fold in the candidate's hop inflation ``h*(U + k*ovh)`` so the
-    eq-(8) uplink comes out to the hop-billed leg.  This is the bridge
-    that lets the wireless-side evaluator judge pod-pipeline plans.
+    bytes fold in the candidate's hop inflation ``h*(U + k*ovh + codec)``
+    so the eq-(8) uplink comes out to the hop-billed leg.  This is the
+    bridge that lets the wireless-side evaluator judge pod-pipeline
+    plans.  The wireless model has ONE cut-byte volume for both
+    directions, so direction-asymmetric (``+topk``) codecs cannot be
+    expressed — this raises for them rather than silently averaging.
     """
     if inp.num_stages != 2:
         raise ValueError(
             f"as_wireless maps the 2-stage (UE/BS) pipeline; got "
             f"num_stages={inp.num_stages}")
+    if _parse_wire(inp.wire_dtype)[1] is not None:
+        raise ValueError(
+            f"as_wireless cannot express wire_dtype {inp.wire_dtype!r}: "
+            "the wireless eq-(8) model ships the same cut bytes up and "
+            "down, but a '+topk' codec sparsifies only the downlink — "
+            "evaluate with plan_wall_time instead")
     B = float(max(k, 1))
     h = hop_ratio(2, v)
-    cut_bytes = h * (inp.wire_link_s + k * inp.hop_overhead_s) / (8.0 * B)
+    cut_bytes = h * (inp.wire_link_s + k * inp.hop_overhead_s
+                     + inp.codec_s) / (8.0 * B)
     profile = LayerProfile(
         name="pod-roofline",
         layer_names=("ue_stage", "bs_stage"),
@@ -308,11 +424,14 @@ def tick_wall_time(inp: PlanInputs, k: int, v: int) -> float:
     (XLA latency hiding), per direction.  Used as the objective when
     S != 2 (where the 2-actor simulator is not the true topology)."""
     ticks = schedule_ticks(k, inp.num_stages, v)
-    comm = (inp.wire_link_s / k + inp.hop_overhead_s) \
-        if inp.num_stages > 1 else 0.0
+    comm_f = comm_b = 0.0
+    if inp.num_stages > 1:
+        codec = inp.codec_s / k
+        comm_f = inp.wire_link_s / k + inp.hop_overhead_s + codec
+        comm_b = inp.wire_link_bwd_s / k + inp.hop_overhead_s + codec
     comp_f = inp.stage_fwd_s / (k * v)
     comp_b = inp.stage_bwd_s / (k * v)
-    return ticks * (max(comp_f, comm) + max(comp_b, comm))
+    return ticks * (max(comp_f, comm_f) + max(comp_b, comm_b))
 
 
 def plan_wall_time(inp: PlanInputs, k: int, v: int) -> float:
@@ -470,7 +589,9 @@ def wire_plan_sweep(inp: PlanInputs, wire_candidates=WIRE_AUTO,
     for wd in wire_candidates:
         p = choose_plan(inp.with_wire(wd), **choose_kwargs)
         sweep[wd] = {"k": p.k, "v": p.v, "wall_s": p.wall_s,
-                     "wire_link_s": p.inputs.wire_link_s}
+                     "wire_link_s": p.inputs.wire_link_s,
+                     "wire_link_bwd_s": p.inputs.wire_link_bwd_s,
+                     "codec_s": p.inputs.codec_s}
     none_wall = sweep.get("none", {}).get("wall_s")
     for row in sweep.values():
         row["speedup_vs_none"] = (none_wall / row["wall_s"]
@@ -590,19 +711,25 @@ def plan_inputs_from_record(record: dict, *, num_stages: int | None = None,
     if act_bytes is None:
         act_bytes = _dtype_bytes(record.get("dtype"))
     act_bytes = float(act_bytes)
+    d_model = record.get("d_model", hints.get("d_model"))
+    d_model = int(d_model) if d_model is not None else None
     wblock = hints.get("wire_block")
     if wblock is None:
-        wblock = wire_block_for(record.get("d_model",
-                                           hints.get("d_model")))
+        wblock = wire_block_for(d_model)
     wblock = int(wblock)
 
     pp_bytes = float(rl.get("coll_by_kind", {}).get("collective-permute", 0.0))
     if k0 and pp_bytes > 0:
         hop_bytes = pp_bytes * k0 / (2.0 * ticks0)
         # records compiled WITH a codec ship shrunk payloads; recover the
-        # uncompressed hop so the planner prices every codec from one base
+        # uncompressed hop so the planner prices every codec from one
+        # base.  The HLO bytes cover forward AND backward hops equally,
+        # so a direction-asymmetric (+topk) record un-scales by the MEAN
+        # of the two directions' scales.
         rec_wire = record.get("wire_dtype", "none")
-        hop_bytes /= wire_link_scale(rec_wire, act_bytes, wblock)
+        hop_bytes /= 0.5 * (
+            wire_link_scale(rec_wire, act_bytes, wblock)
+            + wire_link_scale_bwd(rec_wire, act_bytes, wblock, d_model))
     elif "act_hop_bytes" in hints:
         hop_bytes = float(hints["act_hop_bytes"])
     else:
@@ -634,6 +761,9 @@ def plan_inputs_from_record(record: dict, *, num_stages: int | None = None,
         fixed_chip_budget=True,
         act_bytes=act_bytes,
         wire_block=wblock,
+        codec_s_per_byte=float(hints.get("codec_s_per_byte", 0.0)),
+        act_hop_bytes=hop_bytes,
+        d_model=d_model,
     )
     if wire_dtype is not None:
         inp = inp.with_wire(wire_dtype)
@@ -646,7 +776,8 @@ def plan_inputs_from_cfg(cfg, *, batch: int, seq: int, num_stages: int,
                          k_cap: int | None = None, v_cap: int = 4,
                          hop_overhead_s: float | None = None,
                          bwd_fwd_ratio: float = 2.0,
-                         link_bw_Bps: float | None = None) -> PlanInputs:
+                         link_bw_Bps: float | None = None,
+                         codec_s_per_byte: float = 0.0) -> PlanInputs:
     """Compile-free planner inputs estimated from a model config.
 
     Used by ``train.py --pipeline-k auto`` when no dry-run record is
@@ -675,6 +806,9 @@ def plan_inputs_from_cfg(cfg, *, batch: int, seq: int, num_stages: int,
         fixed_chip_budget=False,
         act_bytes=elt_bytes,
         wire_block=wire_block_for(cfg.d_model),
+        codec_s_per_byte=codec_s_per_byte,
+        act_hop_bytes=act_bytes,
+        d_model=int(cfg.d_model),
     )
 
 
@@ -718,9 +852,9 @@ def main(argv=None):
                     help="per-hop message overhead seconds "
                          "(default: HW dcn latency / record hints)")
     ap.add_argument("--wire", default="none",
-                    choices=["none", "int8", "fp8", "auto"],
-                    help="hop codec to bill the plan with; 'auto' "
-                         "enumerates the codec jointly with (k, v)")
+                    help="hop codec to bill the plan with: none | int8 | "
+                         "fp8 | '<base>+topk<frac>' (e.g. int8+topk0.25); "
+                         "'auto' enumerates the codec jointly with (k, v)")
     ap.add_argument("--hints", default=None,
                     help="JSON with measured planner_hints (e.g. the "
                          "benchmarks/ppermute_probe.py output) overlaid "

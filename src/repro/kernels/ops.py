@@ -15,6 +15,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import moe_gmm as _gmm
 from repro.kernels import rglru as _rglru
 from repro.kernels import rwkv6 as _rwkv6
+from repro.kernels import wire_codec as _wc
 
 
 def _interpret() -> bool:
@@ -44,3 +45,16 @@ def wkv6(r, k, v, w, u, s0=None):
 def moe_gmm(h, w):
     """Grouped matmul h [E,C,D] @ w [E,D,F] -> [E,C,F]."""
     return _gmm.moe_gmm(h, w, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("wire_dtype",))
+def wire_encode(x, *, wire_dtype: str = "int8"):
+    """Fused wire-codec encode: [..., d] -> (payload, fp32 scales).
+    Bit-identical to parallel.wire's jnp reference path (tested)."""
+    return _wc.encode_fused(x, wire_dtype, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def wire_decode(q, scale, *, out_dtype="bfloat16"):
+    """Fused wire-codec decode: (payload, scales) -> [..., d]."""
+    return _wc.decode_fused(q, scale, out_dtype, interpret=_interpret())

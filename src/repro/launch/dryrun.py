@@ -104,12 +104,24 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
             batch_sh = policy.batch_shardings(batch)
             pipeline = None
             if pipeline_k:
-                from repro.parallel.pipeline import PipelineSpec
+                from repro.parallel.pipeline import (PipelineSpec,
+                                                     wire_ef_zeros)
                 assert multi_pod, "the C2P2SL pipeline runs over the pod axis"
                 pipeline = PipelineSpec(num_stages=mesh.shape["pod"],
                                         microbatches=pipeline_k,
                                         virtual_stages=pipeline_v,
                                         wire_dtype=wire_dtype or "none")
+                ef = jax.eval_shape(
+                    lambda: wire_ef_zeros(cfg, pipeline, shape.global_batch,
+                                          shape.seq_len))
+                if ef is not None:
+                    # top-k wire codec: the EF residual rides the train
+                    # state, stage-sharded like the pipeline's xs buffer.
+                    # (policy's path rules don't know this 5-D buffer,
+                    # so pin its sharding explicitly.)
+                    state["wire_ef"] = ef
+                    state_sh["wire_ef"] = jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec("pod"))
             step = make_lm_train_step(model, opt, microbatches=microbatches,
                                       pipeline=pipeline)
             jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
@@ -224,10 +236,12 @@ def main():
     ap.add_argument("--pipeline-v", type=int, default=1,
                     help="interleaved virtual stages per pipeline stage")
     ap.add_argument("--wire-dtype", default="none",
-                    choices=["none", "int8", "fp8"],
                     help="wire codec on the pipeline's cut-activation "
-                         "hop (parallel/wire.py); records carry it so "
-                         "the planner can un-scale the ppermute bytes")
+                         "hop (parallel/wire.py): none|int8|fp8, "
+                         "optionally '+topk<frac>' for the sparsified "
+                         "gradient hop (e.g. int8+topk0.25); records "
+                         "carry it so the planner can un-scale the "
+                         "ppermute bytes")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--out", default="results/dryrun.jsonl")
     ap.add_argument("--plan-out", default=None,

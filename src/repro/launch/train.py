@@ -102,10 +102,12 @@ def resolve_pipeline_plan(*, pipeline_stages: int, pipeline_k,
     k_arg = _parse_auto_int(pipeline_k, "--pipeline-k")
     v_arg = _parse_auto_int(virtual_stages, "--virtual-stages")
     wire = "none" if wire_dtype is None else str(wire_dtype).strip().lower()
-    if wire not in ("none", "int8", "fp8", "auto"):
-        raise SystemExit(
-            f"--wire-dtype must be none, int8, fp8 or auto, got "
-            f"{wire_dtype!r}")
+    if wire != "auto":
+        from repro.parallel import wire as wire_mod
+        try:
+            wire = wire_mod.validate_wire_dtype(wire)
+        except (ValueError, NotImplementedError) as e:
+            raise SystemExit(f"--wire-dtype: {e}")
     if pipeline_stages <= 1:
         if v_arg not in (None, 1):
             raise SystemExit(
@@ -205,12 +207,13 @@ def main(argv=None):
                          "planner trade the extra ppermute volume "
                          "against the bubble shrink (unset: 1)")
     ap.add_argument("--wire-dtype", default="none",
-                    choices=["none", "int8", "fp8", "auto"],
                     help="wire codec for the pipeline's cut-activation "
                          "hop (parallel/wire.py): int8/fp8 block-"
                          "quantize the ppermute payload both directions; "
-                         "'auto' lets the roofline planner enumerate the "
-                         "codec jointly with (k, v)")
+                         "'<base>+topk<frac>' (e.g. int8+topk0.25) "
+                         "additionally sparsifies the gradient hop with "
+                         "error feedback; 'auto' lets the roofline "
+                         "planner enumerate the codec jointly with (k, v)")
     ap.add_argument("--plan-roofline", default=None,
                     help="dry-run record (JSON/JSONL) driving the "
                          "auto-planner; default: compile-free config "
@@ -247,25 +250,6 @@ def main(argv=None):
         from repro.training.compress import init_error_fb
         state["error_fb"] = init_error_fb(params)
 
-    # resume-from-checkpoint (fault-tolerance entry point)
-    if args.ckpt_dir:
-        last = ckpt_lib.latest_step(args.ckpt_dir)
-        if last is not None:
-            try:
-                state = ckpt_lib.restore(args.ckpt_dir, last, state)
-            except KeyError as e:
-                # checkpoints taken BEFORE --compress-grads carry no
-                # error-feedback tree; restore everything else and let
-                # EF restart from zero (its natural initial state)
-                if "error_fb" not in state or "error_fb" not in str(e):
-                    raise
-                efb = state.pop("error_fb")
-                state = ckpt_lib.restore(args.ckpt_dir, last, state)
-                state["error_fb"] = efb
-                print("checkpoint predates --compress-grads — "
-                      "error feedback restarts at zero")
-            print(f"resumed from step {last}")
-
     pipeline, plan_info = resolve_pipeline_plan(
         pipeline_stages=args.pipeline_stages,
         pipeline_k=args.pipeline_k,
@@ -274,6 +258,36 @@ def main(argv=None):
         plan_roofline=args.plan_roofline,
         wire_dtype=args.wire_dtype,
         plan_hints=args.plan_hints)
+    if pipeline is not None:
+        from repro.parallel.pipeline import wire_ef_zeros
+        ef = wire_ef_zeros(cfg, pipeline, args.batch, args.seq)
+        if ef is not None:     # top-k wire codec: EF rides the train state
+            state["wire_ef"] = ef
+
+    # resume-from-checkpoint (fault-tolerance entry point)
+    if args.ckpt_dir:
+        last = ckpt_lib.latest_step(args.ckpt_dir)
+        if last is not None:
+            # checkpoints taken BEFORE --compress-grads / a top-k wire
+            # codec carry no error-feedback entry; restore everything
+            # else and let the residual restart from zero (its natural
+            # initial state)
+            fresh = {}
+            while True:
+                try:
+                    state = ckpt_lib.restore(args.ckpt_dir, last, state)
+                    break
+                except KeyError as e:
+                    missing = [key for key in ("error_fb", "wire_ef")
+                               if key in state and key in str(e)]
+                    if not missing:
+                        raise
+                    fresh[missing[0]] = state.pop(missing[0])
+                    print(f"checkpoint predates {missing[0]} — "
+                          "error feedback restarts at zero")
+            state.update(fresh)
+            print(f"resumed from step {last}")
+
     mesh = None
     if pipeline is not None:
         if args.microbatches != 1:

@@ -202,13 +202,39 @@ def _check_mesh(mesh, spec: PipelineSpec):
             f"{spec.axis} shard)")
 
 
+def wire_ef_ticks(spec: PipelineSpec) -> int:
+    """Tick count of one batch's schedule — the EF buffer's slot axis."""
+    return _sigma(spec.microbatches - 1, spec.num_stages,
+                  spec.virtual_stages) + spec.num_stages * spec.virtual_stages
+
+
+def wire_ef_zeros(cfg, spec: PipelineSpec, batch: int, seq: int):
+    """Zero-initialized error-feedback buffer for a top-k wire codec:
+    f32 [S, ticks, mb, seq_total, d_model], one residual slot per
+    (stage, tick) of the static schedule.  ``batch`` / ``seq`` are the
+    RAW batch dims — padding (ragged k) and the vlm patch prefix are
+    accounted for here exactly as ``make_pipelined_loss`` shapes the
+    micro-batches.  Returns None when the codec carries no top-k (or
+    S=1, where there is no hop)."""
+    if spec.num_stages <= 1 or not wire.has_topk(spec.wire_dtype):
+        return None
+    k = spec.microbatches
+    mb = (batch + (-batch) % k) // k
+    seq_total = seq + (cfg.num_patches if cfg.family == "vlm" else 0)
+    return jnp.zeros((spec.num_stages, wire_ef_ticks(spec), mb, seq_total,
+                      cfg.d_model), jnp.float32)
+
+
 def pipeline_blocks(cfg, blocks, xs, positions, spec: PipelineSpec, *,
-                    mesh, prefix_len: int = 0, enc_outs=None):
+                    mesh, prefix_len: int = 0, enc_outs=None, wire_ef=None):
     """Run the stacked homogeneous block stack as a pipeline.
 
     blocks: stacked params, leaves [L, ...]
     xs:     [k, mb, seq, d] micro-batched activations (embedded)
     enc_outs: optional [k, mb, enc_seq, d] (whisper cross-attention memory)
+    wire_ef: [S, ticks, mb, seq, d] f32 error-feedback buffer, REQUIRED
+             for top-k wire codecs at S > 1 (see ``wire_ef_zeros``); its
+             gradient is the updated buffer.
     Returns (hidden [k, mb, seq, d], aux_loss scalar).
 
     The aux loss is the per-layer sum averaged over the k micro-batches —
@@ -220,12 +246,28 @@ def pipeline_blocks(cfg, blocks, xs, positions, spec: PipelineSpec, *,
         raise ValueError(
             f"virtual_stages={spec.virtual_stages} must be >= 1")
     wire.validate_wire_dtype(spec.wire_dtype)
-    staged = _split_stages(blocks, spec.num_stages, spec.virtual_stages)
     k = xs.shape[0]
+    needs_ef = spec.num_stages > 1 and wire.has_topk(spec.wire_dtype)
+    if needs_ef:
+        if wire_ef is None:
+            raise ValueError(
+                f"wire_dtype {spec.wire_dtype!r} sparsifies the gradient "
+                "hop with error feedback — build the EF buffer with "
+                "pipeline.wire_ef_zeros and thread it through the loss "
+                "(make_pipelined_loss / make_lm_train_step do this)")
+        want = (spec.num_stages, wire_ef_ticks(spec)) + xs.shape[1:]
+        if tuple(wire_ef.shape) != want:
+            raise ValueError(
+                f"wire_ef shape {tuple(wire_ef.shape)} != expected {want} "
+                "([S, ticks, mb, seq, d] — rebuild with wire_ef_zeros "
+                "after changing the spec or batch shape)")
+    else:
+        wire_ef = None
+    staged = _split_stages(blocks, spec.num_stages, spec.virtual_stages)
     run = (_pipeline_partial_manual if compat.CAPS.partial_manual
            else _pipeline_full_manual)
     outs, auxes = run(cfg, staged, xs, positions, spec, mesh,
-                      prefix_len, enc_outs)
+                      prefix_len, enc_outs, wire_ef)
     # last stage's real outputs; aux summed over stages (each owns its own
     # layers' aux), averaged over micro-batches
     return outs[-1], auxes.sum() / k
@@ -248,9 +290,16 @@ def _stage_scan_fn(cfg, spec, positions, prefix_len):
     return stage_scan
 
 
-def _tick_loop(spec, stage, k, xs_full, enc_full, state0, aux0, run_stage):
+def _tick_loop(spec, stage, k, xs_full, enc_full, state0, aux0, run_stage,
+               wire_ef=None):
     """The (interleaved) 1F1B tick schedule shared by both shard_map
     flavours.
+
+    ``wire_ef`` (top-k codecs only) is this stage's error-feedback buffer
+    [ticks, mb, seq, d] f32, entering the scan as per-tick xs so each
+    hop's custom_vjp sees exactly its (stage, tick) slot; the scan's
+    transpose reassembles the updated buffer as the gradient w.r.t. this
+    input (parallel/wire.py::coded_ppermute_ef).
 
     At tick t stage s inverts the interleaved timetable: with
     ``t' = t - s``, ``p = t' mod S``, ``q = (t' - p) / S``, the live
@@ -269,18 +318,28 @@ def _tick_loop(spec, stage, k, xs_full, enc_full, state0, aux0, run_stage):
     v = spec.virtual_stages
     ticks = _sigma(k - 1, s_stages, v) + s_stages * v
     coded = spec.wire_dtype not in (None, "none")
+    base_wire = spec.wire_dtype
+    if coded:
+        base_wire, _frac = wire.parse_wire_dtype(spec.wire_dtype)
+        if _frac is None:
+            wire_ef = None      # dense codec: no EF state to thread
 
-    def hop(y, perm):
+    def hop(y, perm, ef_t):
         """One inter-stage hop: the raw ppermute (bit-identical to the
         uncoded pipeline), or the quantized wire round trip whose
-        custom_vjp codes the transposed backward hop the same way."""
+        custom_vjp codes the transposed backward hop the same way —
+        top-k + error feedback on that backward hop when ``ef_t`` rides
+        along."""
         if not coded:
             return jax.lax.ppermute(y, spec.axis, perm)
-        return wire.coded_ppermute(spec.wire_dtype, spec.axis,
-                                   tuple(perm), y)
+        if ef_t is not None:
+            return wire.coded_ppermute_ef(spec.wire_dtype, spec.axis,
+                                          tuple(perm), y, ef_t)
+        return wire.coded_ppermute(base_wire, spec.axis, tuple(perm), y)
 
-    def tick(carry, t):
+    def tick(carry, xt):
         state, aux_acc = carry
+        t, ef_t = xt if wire_ef is not None else (xt, None)
         tpr = t - stage
         p = jnp.mod(tpr, s_stages)
         q = (tpr - p) // s_stages
@@ -303,13 +362,15 @@ def _tick_loop(spec, stage, k, xs_full, enc_full, state0, aux0, run_stage):
             nxt = y                            # chunk chain stays local
         elif v > 1:
             nxt = hop(y, [(i, (i + 1) % s_stages)
-                          for i in range(s_stages)])
+                          for i in range(s_stages)], ef_t)
         else:
-            nxt = hop(y, [(i, i + 1) for i in range(s_stages - 1)])
+            nxt = hop(y, [(i, i + 1) for i in range(s_stages - 1)], ef_t)
         aux_acc = aux_acc + jnp.where(live, aux, 0.0)
         return (nxt, aux_acc), y
 
-    (_, aux_acc), ys = jax.lax.scan(tick, (state0, aux0), jnp.arange(ticks))
+    xs_scan = jnp.arange(ticks) if wire_ef is None \
+        else (jnp.arange(ticks), wire_ef)
+    (_, aux_acc), ys = jax.lax.scan(tick, (state0, aux0), xs_scan)
     # micro-batch m leaves the last chunk (on stage S-1) at tick
     # sigma(m) + S*v - 1; for v == 1 these are the contiguous ticks
     # [S-1, S-1+k) of the plain schedule
@@ -335,7 +396,7 @@ def _chunk_picker(blocks_local, virtual_stages: int):
 
 
 def _pipeline_partial_manual(cfg, staged, xs, positions, spec, mesh,
-                             prefix_len, enc_outs):
+                             prefix_len, enc_outs, wire_ef=None):
     """Explicit-sharding JAX: Manual over 'pod' only, data/model auto."""
     k = xs.shape[0]
     # micro-batch over data; seq deliberately NOT model-sharded inside the
@@ -352,7 +413,7 @@ def _pipeline_partial_manual(cfg, staged, xs, positions, spec, mesh,
 
     stage_scan = _stage_scan_fn(cfg, spec, positions, prefix_len)
 
-    def per_stage(blocks_stage, xs_full, enc_full):
+    def per_stage(blocks_stage, xs_full, enc_full, ef_full):
         # manual over 'pod': blocks_stage leaves [1, v, L/(S*v), ...]
         blocks_local = jax.tree.map(lambda a: a[0], blocks_stage)
         pick = _chunk_picker(blocks_local, spec.virtual_stages)
@@ -361,9 +422,17 @@ def _pipeline_partial_manual(cfg, staged, xs, positions, spec, mesh,
         state = compat.mark_varying(
             jnp.zeros(xs_full.shape[1:], xs_full.dtype), (spec.axis,))
         aux0 = compat.mark_varying(jnp.float32(0.0), (spec.axis,))
+        ef_local = None
+        if ef_full is not None:
+            # this stage's [ticks, mb, seq, d] slice; anchor the
+            # micro-batch dim to the data axis like every other carry
+            ef_local = jax.lax.with_sharding_constraint(
+                ef_full[0],
+                compat.auto_axes_sharding(mesh, spec.axis, P(None, "data")))
         out, aux_acc = _tick_loop(
             spec, stage, k, xs_full, enc_full, state, aux0,
-            lambda cur, enc, j: stage_scan(pick(j), cur, enc, pin))
+            lambda cur, enc, j: stage_scan(pick(j), cur, enc, pin),
+            wire_ef=ef_local)
         # stack a stage axis so out_specs=P('pod') can concatenate
         return out[None], aux_acc[None]
 
@@ -372,8 +441,20 @@ def _pipeline_partial_manual(cfg, staged, xs, positions, spec, mesh,
     if enc_outs is not None:
         args.append(enc_outs)
         in_specs.append(P())
-    body = per_stage if enc_outs is not None \
-        else (lambda b, x: per_stage(b, x, None))
+    if wire_ef is not None:
+        args.append(wire_ef)
+        in_specs.append(P(spec.axis))
+
+    def body(*a):
+        i = 2
+        enc_full = ef_full = None
+        if enc_outs is not None:
+            enc_full = a[i]
+            i += 1
+        if wire_ef is not None:
+            ef_full = a[i]
+        return per_stage(a[0], a[1], enc_full, ef_full)
+
     fn = compat.shard_map(
         body, mesh,
         in_specs=tuple(in_specs),
@@ -383,7 +464,7 @@ def _pipeline_partial_manual(cfg, staged, xs, positions, spec, mesh,
 
 
 def _pipeline_full_manual(cfg, staged, xs, positions, spec, mesh,
-                          prefix_len, enc_outs):
+                          prefix_len, enc_outs, wire_ef=None):
     """Legacy JAX: fully-manual region (partial-manual aborts in the 0.4.x
     SPMD partitioner).
 
@@ -403,7 +484,8 @@ def _pipeline_full_manual(cfg, staged, xs, positions, spec, mesh,
 
     stage_scan = _stage_scan_fn(cfg, spec, positions, prefix_len)
 
-    def per_stage(stage_ids, blocks_stage, xs_full, pos, enc_full):
+    def per_stage(stage_ids, blocks_stage, xs_full, pos, enc_full,
+                  ef_full):
         del pos  # replicated copy of ``positions`` (kept as an explicit
         # argument: legacy shard_map cannot close over traced values)
         blocks_local = jax.tree.map(lambda a: a[0], blocks_stage)
@@ -411,10 +493,12 @@ def _pipeline_full_manual(cfg, staged, xs, positions, spec, mesh,
         stage = stage_ids[0]
         state = jnp.zeros(xs_full.shape[1:], xs_full.dtype)
         aux0 = jnp.float32(0.0)
+        ef_local = None if ef_full is None else ef_full[0]
         out, aux_acc = _tick_loop(
             spec, stage, k, xs_full, enc_full, state, aux0,
             lambda cur, enc, j: stage_scan(pick(j), cur, enc,
-                                           lambda y: y))
+                                           lambda y: y),
+            wire_ef=ef_local)
         if other_axes:
             # per-data-slice aux -> batch mean (replicated axes unchanged)
             aux_acc = jax.lax.pmean(aux_acc, other_axes)
@@ -426,8 +510,22 @@ def _pipeline_full_manual(cfg, staged, xs, positions, spec, mesh,
     if enc_outs is not None:
         args.append(enc_outs)
         in_specs.append(mb_spec)
-    body = per_stage if enc_outs is not None \
-        else (lambda s, b, x, p: per_stage(s, b, x, p, None))
+    if wire_ef is not None:
+        # [S, ticks, mb, seq, d]: stage dim manual over pod, micro-batch
+        # dim sharded over data exactly like the xs micro-batches
+        args.append(wire_ef)
+        in_specs.append(P(spec.axis, None, data_axis))
+
+    def body(*a):
+        i = 4
+        enc_full = ef_full = None
+        if enc_outs is not None:
+            enc_full = a[i]
+            i += 1
+        if wire_ef is not None:
+            ef_full = a[i]
+        return per_stage(a[0], a[1], a[2], a[3], enc_full, ef_full)
+
     fn = compat.shard_map(
         body, mesh,
         in_specs=tuple(in_specs),
@@ -457,7 +555,7 @@ def make_pipelined_loss(model, spec: PipelineSpec, mesh=None):
     k = spec.microbatches
     assert k >= 1, f"microbatches k={k} must be >= 1"
 
-    def loss_fn(params, batch):
+    def _loss(params, batch, wire_ef):
         # Plain-JAX context inside: data/model axes are GSPMD-auto (or
         # replicated on legacy JAX), the pipeline shard_map owns 'pod'.
         from repro.parallel.context import get_ctx
@@ -499,11 +597,23 @@ def make_pipelined_loss(model, spec: PipelineSpec, mesh=None):
             out, aux = pipeline_blocks(cfg, params["blocks"], xs, positions,
                                        spec, mesh=use_mesh,
                                        prefix_len=prefix_len,
-                                       enc_outs=enc_outs)
+                                       enc_outs=enc_outs, wire_ef=wire_ef)
             h = out.reshape(b + pad_rows, seq, x.shape[-1])[:b]
             h = apply_norm(h, params["final_norm"], cfg.norm)
             loss = model.xent(params, h, labels)
             total = loss + 0.01 * aux
             return total, {"xent": loss, "aux": aux}
 
+    needs_ef = spec.num_stages > 1 and wire.has_topk(spec.wire_dtype)
+    if needs_ef:
+        # 3-arg loss: the EF buffer is an input whose GRADIENT is the
+        # updated buffer (the hops' custom_vjp emits the new residuals as
+        # the cotangent) — the train step extracts it with
+        # value_and_grad(argnums=(0, 2)) and writes it back to state.
+        def loss_fn(params, batch, wire_ef):
+            return _loss(params, batch, wire_ef)
+    else:
+        def loss_fn(params, batch):
+            return _loss(params, batch, None)
+    loss_fn.needs_wire_ef = needs_ef
     return loss_fn

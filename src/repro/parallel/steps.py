@@ -37,17 +37,30 @@ def make_lm_train_step(model: LM, opt: Optimizer, *, microbatches: int = 1,
     (the state tree then carries an ``error_fb`` entry; see
     training/compress.py).
     """
+    needs_wire_ef = False
     if pipeline is not None:
         from repro.parallel.pipeline import make_pipelined_loss
         loss_fn = make_pipelined_loss(model, pipeline, mesh=mesh)
-        vg = jax.value_and_grad(loss_fn, has_aux=True)
+        needs_wire_ef = getattr(loss_fn, "needs_wire_ef", False)
+        if needs_wire_ef:
+            # top-k wire codec: the EF buffer is a third loss input whose
+            # gradient IS the updated buffer (pipeline.py) — pull it out
+            # alongside the weight grads and write it back to the state.
+            vg = jax.value_and_grad(loss_fn, argnums=(0, 2), has_aux=True)
+        else:
+            vg = jax.value_and_grad(loss_fn, has_aux=True)
     else:
         vg = microbatched_value_and_grad(make_lm_loss(model), microbatches)
 
     def train_step(state_tree, batch):
         params = state_tree["params"]
-        (loss, mets), grads = vg(params, batch)
         new_state = {}
+        if needs_wire_ef:
+            (loss, mets), (grads, new_ef) = vg(params, batch,
+                                               state_tree["wire_ef"])
+            new_state["wire_ef"] = new_ef
+        else:
+            (loss, mets), grads = vg(params, batch)
         if compress:
             from repro.training.compress import (compress_grads,
                                                  decompress_grads)

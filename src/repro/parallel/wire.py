@@ -1,4 +1,4 @@
-"""Quantized wire codec for the inter-stage pipeline hop.
+"""Quantized wire codec for the inter-stage pipeline hop (codec v2).
 
 The pod pipeline's wall time is gated by moving the cut-layer activation
 ``s_l`` (forward hop) and its gradient (the transposed backward hop) across
@@ -10,23 +10,54 @@ uplink.  This module compresses that payload on the wire only: each hop
 so the stages themselves keep computing in the model dtype and the
 schedule/autodiff structure of ``parallel/pipeline.py`` is untouched.  The
 whole round trip is wrapped in a ``custom_vjp`` whose backward rule applies
-the SAME codec to the activation-gradient payload on the reversed
-permutation — the downlink pays the same wire discount as the uplink.
+a codec to the activation-gradient payload on the reversed permutation —
+the downlink pays the same wire discount as the uplink.
 
-Codec format (shared quantizer with ``training/compress.py``):
+Codec grammar (``parse_wire_dtype``):
+
+    "none" | "int8" | "fp8" | "<base>+topk<frac>"   e.g. "int8+topk0.25"
+
+The plain names are the PR-5 dense block codec.  The ``+topk`` suffix adds
+top-k sparsification WITH error feedback on the BACKWARD hop only: the
+forward hop still ships the dense base codec (every element of the cut
+activation feeds the next stage — dropping entries there starves the
+forward compute), while the gradient hop keeps only the ``frac*d`` largest-
+magnitude entries per row and feeds the dropped mass back into the next
+step's gradient at the same (stage, tick) slot.  EF is sound on the
+gradient hop and NOT on the activation hop because the pipeline schedule
+is static: tick t of stage s carries the same micro-batch slot every
+batch, so the residual buffer keyed per (stage, tick) re-meets "its"
+payload each step — the EF-SGD contraction argument applies — whereas the
+forward activation at a tick is a fresh function of the current weights
+with no persistent error to correct (docs/wire.md).  ``topk>=1`` keeps
+every entry and normalizes to the dense base codec at parse time.
+
+Dense codec format (shared quantizer with ``training/compress.py``):
 
   * blocks are taken along the LAST axis (d_model) so the leading
     micro-batch/sequence dims — the dims GSPMD shards over ``data`` inside
     the partial-manual lowering — are never mixed across devices by a
     reshape;
-  * block size is the largest divisor of d_model that is <= 256 (no
-    padding: the wire never carries bytes the activation doesn't have);
+  * block size is the largest divisor of d_model <= 256 (no padding;
+    canonical ``wire_block`` lives in ``kernels/wire_codec.py`` — the
+    fused Pallas implementation of this codec — and is re-exported here);
   * per-block fp32 absmax scales: payload = int8 (block max -> 127) or
     fp8-e4m3 (block max -> 448), ~``1 + 4/block`` bytes/element on the
     wire vs 2 (bf16) / 4 (fp32) uncompressed;
-  * NO error feedback on this path: every tick quantizes a different
-    micro-batch's activation, so there is no persistent tensor a residual
-    could be fed back into (docs/wire.md discusses the EF/no-EF choice).
+  * degenerate blocks are a NET LOSS (a prime d_model forces block=1:
+    5 bytes/element > raw) — ``encode`` detects this and falls back to
+    the raw payload with a one-time warning instead of silently
+    inflating the wire (``codec_net_loss``);
+  * ``impl='fused'`` routes encode/decode through the fused Pallas
+    kernels (``kernels/ops.wire_encode``/``wire_decode``); the default
+    ``'auto'`` picks fused on a TPU backend and the jnp reference path
+    elsewhere — the two are bit-identical under jit (tested).
+
+Top-k payload format (backward hop only): per row of ``d`` entries the
+wire carries ``kk = round(frac*d)`` base-quantized values, their int16
+indices (int32 when d > 32767), and one fp32 per-row scale —
+``frac*(1 + idx_bytes) + 4/d`` bytes/element, e.g. 0.75 B at frac=0.25
+vs 1.016 B dense int8.
 
 ``wire_dtype="none"`` never enters this module from the pipeline — the
 tick loop keeps the raw ``ppermute`` path bit-for-bit identical to the
@@ -40,63 +71,161 @@ identically under every codec.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.wire_codec import wire_block  # noqa: F401  (canonical)
 from repro.training.compress import (dequantize_blocks, payload_dtype,
                                      quantize_blocks)
 
-WIRE_DTYPES = ("none", "int8", "fp8")
+WIRE_DTYPES = ("none", "int8", "fp8")   # base codecs
 
 
-def validate_wire_dtype(wire_dtype: str) -> str:
-    """Normalize + validate a codec name ('none' | 'int8' | 'fp8')."""
+def parse_wire_dtype(wire_dtype):
+    """Codec name -> ``(base, topk_frac | None)``.
+
+    Accepts 'none' / 'int8' / 'fp8' and '<base>+topk<frac>' (e.g.
+    'int8+topk0.25').  ``frac >= 1`` keeps every entry, so it normalizes
+    to the dense base codec (frac None) — 'int8+topk1.0' IS 'int8'.
+    """
     w = "none" if wire_dtype is None else str(wire_dtype).strip().lower()
-    if w not in WIRE_DTYPES:
+    base, sep, suffix = w.partition("+")
+    frac = None
+    if sep:
+        if not suffix.startswith("topk"):
+            raise ValueError(
+                f"wire_dtype {wire_dtype!r}: unknown modifier {suffix!r} "
+                "(expected '<base>+topk<frac>', e.g. 'int8+topk0.25')")
+        try:
+            frac = float(suffix[len("topk"):])
+        except ValueError:
+            raise ValueError(
+                f"wire_dtype {wire_dtype!r}: top-k fraction "
+                f"{suffix[len('topk'):]!r} is not a number")
+        if not frac > 0.0:
+            raise ValueError(
+                f"wire_dtype {wire_dtype!r}: top-k fraction must be > 0")
+        if frac >= 1.0:
+            frac = None           # keeps everything == dense base codec
+    if base not in WIRE_DTYPES:
         raise ValueError(
-            f"wire_dtype {wire_dtype!r} not in {WIRE_DTYPES} — 'none' ships "
-            "the raw activation, 'int8'/'fp8' block-quantize the hop")
-    if w == "fp8":
+            f"wire_dtype {wire_dtype!r} base {base!r} not in {WIRE_DTYPES} "
+            "— 'none' ships the raw activation, 'int8'/'fp8' block-"
+            "quantize the hop, '<base>+topk<frac>' adds top-k + error "
+            "feedback on the gradient hop")
+    if frac is not None and base == "none":
+        raise ValueError(
+            f"wire_dtype {wire_dtype!r}: top-k rides a quantized payload "
+            "— use 'int8+topk<frac>' or 'fp8+topk<frac>'")
+    return base, frac
+
+
+def format_wire_dtype(base: str, frac) -> str:
+    return base if frac is None else f"{base}+topk{frac:g}"
+
+
+def has_topk(wire_dtype) -> bool:
+    """True when the codec sparsifies the gradient hop (needs the EF
+    buffer threaded through the tick loop)."""
+    return parse_wire_dtype(wire_dtype)[1] is not None
+
+
+def validate_wire_dtype(wire_dtype) -> str:
+    """Normalize + validate a codec name; returns the canonical spelling
+    ('int8+topk1.0' normalizes to 'int8')."""
+    base, frac = parse_wire_dtype(wire_dtype)
+    if base == "fp8":
         payload_dtype("fp8")  # raises on JAX without float8_e4m3fn
-    return w
+    return format_wire_dtype(base, frac)
 
 
-def wire_block(dim: int, block: int = 256) -> int:
-    """Largest block size <= ``block`` dividing ``dim`` (no padding)."""
-    b = min(block, max(dim, 1))
-    while dim % b:
-        b -= 1
-    return b
+# ---------------------------------------------------------------------------
+# Dense base codec (forward hop; PR-5 format + fused dispatch + net-loss
+# fallback).
+# ---------------------------------------------------------------------------
 
 
-def encode(x, wire_dtype: str):
+def codec_net_loss(d: int, act_itemsize: int) -> bool:
+    """True when the dense codec would INFLATE the wire for this width:
+    ``1 + 4/block`` bytes/element >= the raw element width (block=1 at a
+    prime d_model costs 5 B/elt — worse than bf16 or fp32)."""
+    b = wire_block(int(d))
+    return (1.0 + 4.0 / b) >= float(act_itemsize)
+
+
+_NET_LOSS_WARNED: set = set()
+
+
+def _warn_net_loss_once(wire_dtype, d: int, dtype):
+    key = (str(wire_dtype), int(d), str(dtype))
+    if key in _NET_LOSS_WARNED:
+        return
+    _NET_LOSS_WARNED.add(key)
+    b = wire_block(int(d))
+    warnings.warn(
+        f"wire codec {wire_dtype!r} is a net loss at d_model={d}: block "
+        f"{b} costs {1.0 + 4.0 / b:.2f} wire bytes/element vs "
+        f"{jnp.dtype(dtype).itemsize} raw ({dtype}) — shipping the raw "
+        "activation instead (pick a d_model with a divisor <= 256, or "
+        "wire_dtype='none')")
+
+
+def _impl(impl: str) -> str:
+    if impl == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "jnp"
+    if impl not in ("fused", "jnp"):
+        raise ValueError(f"codec impl {impl!r} not in ('auto','fused','jnp')")
+    return impl
+
+
+def encode(x, wire_dtype: str, impl: str = "auto"):
     """[..., d] activation -> (payload [..., d/b, b], fp32 scales
-    [..., d/b, 1]) for a quantized codec."""
+    [..., d/b, 1]) for a quantized codec.
+
+    Degenerate blocks (``codec_net_loss``) fall back to the raw payload:
+    returns ``(x, None)`` with a one-time warning, which ``decode``
+    passes through unchanged — the hop then ships exactly the raw bytes.
+    """
     d = x.shape[-1]
+    if codec_net_loss(d, jnp.dtype(x.dtype).itemsize):
+        _warn_net_loss_once(wire_dtype, d, x.dtype)
+        return x, None
+    if _impl(impl) == "fused":
+        from repro.kernels import ops
+        return ops.wire_encode(x, wire_dtype=wire_dtype)
     b = wire_block(d)
     blocks = x.astype(jnp.float32).reshape(x.shape[:-1] + (d // b, b))
     return quantize_blocks(blocks, wire_dtype)
 
 
-def decode(payload, scale, out_dtype):
-    """Inverse of ``encode``: back to [..., d] at the activation dtype."""
+def decode(payload, scale, out_dtype, impl: str = "auto"):
+    """Inverse of ``encode``: back to [..., d] at the activation dtype.
+    ``scale=None`` is the raw net-loss fallback — passthrough."""
+    if scale is None:
+        return payload.astype(out_dtype)
+    if _impl(impl) == "fused":
+        from repro.kernels import ops
+        return ops.wire_decode(payload, scale,
+                               out_dtype=jnp.dtype(out_dtype))
     x = dequantize_blocks(payload, scale)
     return x.reshape(
         x.shape[:-2] + (x.shape[-2] * x.shape[-1],)).astype(out_dtype)
 
 
-def roundtrip(x, wire_dtype: str):
+def roundtrip(x, wire_dtype: str, impl: str = "auto"):
     """encode->decode without the permute — the codec's numerical identity
     (what a stage receives when the link is lossless)."""
-    q, s = encode(x, wire_dtype)
-    return decode(q, s, x.dtype)
+    q, s = encode(x, wire_dtype, impl)
+    return decode(q, s, x.dtype, impl)
 
 
 def _coded_hop(wire_dtype, axis_name, perm, x):
     q, s = encode(x, wire_dtype)
     q = jax.lax.ppermute(q, axis_name, perm)
-    s = jax.lax.ppermute(s, axis_name, perm)
+    if s is not None:
+        s = jax.lax.ppermute(s, axis_name, perm)
     return decode(q, s, x.dtype)
 
 
@@ -126,3 +255,110 @@ def _coded_bwd(wire_dtype, axis_name, perm, _res, g):
 
 
 coded_ppermute.defvjp(_coded_fwd, _coded_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Top-k sparsified gradient hop with error feedback.
+# ---------------------------------------------------------------------------
+
+
+def topk_count(d: int, frac: float) -> int:
+    """Entries kept per row of ``d`` under a top-k fraction (>= 1)."""
+    return max(1, min(int(d), int(round(frac * d))))
+
+
+def topk_index_dtype(d: int):
+    """int16 wire indices whenever they fit (d <= 32767) — int32 indices
+    would make topk0.25 COST more than dense int8 (1.25 vs 1.016 B/elt)."""
+    return jnp.int16 if int(d) <= 32767 else jnp.int32
+
+
+def topk_encode(x, wire_dtype: str):
+    """f32 [..., d] -> (payload [..., kk], indices [..., kk] int16/int32,
+    fp32 per-row scale [..., 1]) keeping the ``frac*d`` largest-magnitude
+    entries per row, base-quantized against the row absmax."""
+    base, frac = parse_wire_dtype(wire_dtype)
+    if frac is None:
+        raise ValueError(
+            f"wire_dtype {wire_dtype!r} has no top-k fraction — use the "
+            "dense encode/decode")
+    d = x.shape[-1]
+    kk = topk_count(d, frac)
+    xf = x.astype(jnp.float32)
+    _, idx = jax.lax.top_k(jnp.abs(xf), kk)
+    vals = jnp.take_along_axis(xf, idx, axis=-1)
+    q, scale = quantize_blocks(vals, base)   # one "block" = the kept row
+    return q, idx.astype(topk_index_dtype(d)), scale
+
+
+def topk_decode(q, idx, scale, d: int, out_dtype):
+    """Scatter the kept entries back into dense [..., d] rows."""
+    vals = dequantize_blocks(q, scale)
+    lead = q.shape[:-1]
+    kk = q.shape[-1]
+    rows = 1
+    for n in lead:
+        rows *= int(n)
+    v2 = vals.reshape(rows, kk)
+    i2 = idx.astype(jnp.int32).reshape(rows, kk)
+    rowids = jnp.arange(rows, dtype=jnp.int32)[:, None]
+    # .add, not .set: top-k indices are unique per row, so this equals a
+    # scatter-set but stays deterministic for the all-zero payloads of
+    # devices outside the permutation (idx collides at 0 there).
+    out = jnp.zeros((rows, int(d)), jnp.float32).at[rowids, i2].add(v2)
+    return out.reshape(lead + (int(d),)).astype(out_dtype)
+
+
+def _topk_hop(wire_dtype, axis_name, perm, g):
+    """One top-k-coded hop of a (pre-corrected) f32 gradient payload:
+    returns (received dense f32, locally-decoded dense f32).  The local
+    decode is what THIS device's receiver will reconstruct — the term
+    the error-feedback residual is computed against."""
+    d = g.shape[-1]
+    q, idx, scale = topk_encode(g, wire_dtype)
+    dec_local = topk_decode(q, idx, scale, d, jnp.float32)
+    q = jax.lax.ppermute(q, axis_name, perm)
+    idx = jax.lax.ppermute(idx, axis_name, perm)
+    scale = jax.lax.ppermute(scale, axis_name, perm)
+    return topk_decode(q, idx, scale, d, jnp.float32), dec_local
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def coded_ppermute_ef(wire_dtype, axis_name, perm, x, ef):
+    """The top-k codec's hop: dense base-coded FORWARD, top-k + error
+    feedback BACKWARD.
+
+    ``ef`` is the f32 residual of this (stage, tick) slot from the
+    previous batch; it is a differentiable input whose returned
+    "cotangent" IS the new residual — that is how the EF state escapes
+    the backward pass (``jax.value_and_grad(loss, argnums=(0, 2))`` in
+    ``parallel/steps.py`` picks it up next to the weight grads).  The
+    backward rule ships ``topk(g + ef)`` on the reversed permutation and
+    returns ``(g + ef) - decode(topk(g + ef))`` as the residual — plain
+    EF-SGD on the gradient payload, sound here because the static
+    schedule re-meets the same slot every batch (module docstring).
+    """
+    base, _ = parse_wire_dtype(wire_dtype)
+    return _coded_hop(base, axis_name, perm, x)
+
+
+def _coded_ef_fwd(wire_dtype, axis_name, perm, x, ef):
+    base, _ = parse_wire_dtype(wire_dtype)
+    return _coded_hop(base, axis_name, perm, x), ef
+
+
+def _coded_ef_bwd(wire_dtype, axis_name, perm, ef, g):
+    # the cotangent dtype equals the primal activation dtype, so the
+    # net-loss check matches the forward hop's fallback decision
+    rev = tuple((dst, src) for src, dst in perm)
+    d = g.shape[-1]
+    if codec_net_loss(d, jnp.dtype(g.dtype).itemsize):
+        # the forward hop fell back to raw (degenerate block) — keep the
+        # backward raw too and carry the residual unchanged
+        return jax.lax.ppermute(g, axis_name, rev), ef
+    corrected = g.astype(jnp.float32) + ef
+    gx, dec_local = _topk_hop(wire_dtype, axis_name, rev, corrected)
+    return gx.astype(g.dtype), corrected - dec_local
+
+
+coded_ppermute_ef.defvjp(_coded_ef_fwd, _coded_ef_bwd)

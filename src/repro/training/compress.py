@@ -43,6 +43,15 @@ def payload_dtype(wire_dtype: str):
         f"unknown quantized codec {wire_dtype!r} (expected 'int8' or 'fp8')")
 
 
+def qmax_for(wire_dtype: str) -> float:
+    """Largest representable payload magnitude for a quantized codec —
+    the constant the block quantizer and the fused Pallas wire codec
+    (kernels/wire_codec.py) must share for bit parity."""
+    if wire_dtype not in _QMAX:
+        payload_dtype(wire_dtype)  # raise the canonical error
+    return _QMAX[wire_dtype]
+
+
 def quantize_blocks(blocks, wire_dtype: str = "int8"):
     """[..., B] fp32 blocks -> (payload int8/fp8-e4m3, fp32 scales [..., 1]).
 

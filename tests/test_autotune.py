@@ -316,6 +316,96 @@ def test_degenerate_block_makes_codec_a_net_loss():
     assert plan.wall_s <= choose_plan(inp.with_wire("int8")).wall_s
 
 
+def test_wire_bwd_byte_model():
+    """Top-k backward bytes: frac*(1 + idx_bytes) + 4/d per element; the
+    forward hop stays the dense base; dense codecs are symmetric."""
+    from repro.analysis.autotune import (wire_bytes_per_element_bwd,
+                                         wire_link_scale_bwd)
+
+    assert wire_bytes_per_element_bwd("int8", 4.0) == \
+        wire_bytes_per_element("int8", 4.0)
+    assert wire_bytes_per_element_bwd("none", 4.0) == 4.0
+    # d=2560: int16 indices, amortized per-row fp32 scale
+    assert wire_bytes_per_element_bwd("int8+topk0.25", 4.0,
+                                      d_model=2560) == \
+        pytest.approx(0.25 * 3 + 4 / 2560)
+    # wide rows need int32 indices — costlier than dense int8!
+    assert wire_bytes_per_element_bwd("int8+topk0.25", 4.0,
+                                      d_model=40000) == \
+        pytest.approx(0.25 * 5 + 4 / 40000)
+    # unknown width: int16 assumed, scale term dropped
+    assert wire_bytes_per_element_bwd("int8+topk0.25", 4.0) == \
+        pytest.approx(0.75)
+    # forward model of a topk codec is its dense base
+    assert wire_bytes_per_element("int8+topk0.25", 4.0) == \
+        wire_bytes_per_element("int8", 4.0)
+    assert wire_link_scale_bwd("int8+topk0.25", 4.0, d_model=2560) < \
+        wire_link_scale("int8", 4.0)
+    # topk >= 1 normalizes to the dense base
+    assert wire_bytes_per_element_bwd("int8+topk1.0", 4.0, d_model=64) == \
+        wire_bytes_per_element("int8", 4.0)
+    with pytest.raises(ValueError, match="wire_dtype"):
+        wire_bytes_per_element("none+topk0.5", 4.0)
+    with pytest.raises(ValueError, match="wire_dtype"):
+        wire_bytes_per_element("int8+topk0", 4.0)
+    with pytest.raises(ValueError, match="wire_dtype"):
+        wire_bytes_per_element("int8+sparse0.5", 4.0)
+
+
+def test_degenerate_block_disarms_topk_saving():
+    """At a degenerate block the runtime EF hop ships raw, so the planner
+    must not advertise a top-k saving there — joint enumeration keeps
+    'none' even with the topk candidate in the pool."""
+    from repro.analysis.autotune import wire_bytes_per_element_bwd
+
+    # block 2 on a bf16 wire: dense codec 3 B/elt >= 2 B raw -> net loss;
+    # the bwd model bills the dense bytes, not the topk formula
+    assert wire_bytes_per_element_bwd("int8+topk0.25", 2.0, block=2,
+                                      d_model=514) == \
+        wire_bytes_per_element("int8", 2.0, block=2)
+    inp = PlanInputs(num_stages=2, stage_fwd_s=0.1, stage_bwd_s=0.2,
+                     link_s=0.05, hop_overhead_s=1e-4, k_cap=16, v_cap=4,
+                     num_layers=8, act_bytes=2.0, wire_block=2, d_model=514)
+    plan = choose_plan(inp, wire_candidates=list(WIRE_AUTO))
+    assert plan.wire_dtype == "none"
+
+
+def test_codec_compute_billing_gates_the_codec():
+    """A codec whose encode+decode compute exceeds its link-time saving
+    must never be chosen: with an absurd codec_s_per_byte the planner
+    keeps 'none', and every chosen codec's billed compute is smaller
+    than the link seconds it saves."""
+    import dataclasses
+
+    inp = fixture_inputs()
+    assert inp.codec_s_per_byte == pytest.approx(1e-12)
+    assert inp.act_hop_bytes == pytest.approx(3.1e7)
+    # fixture billing: 31 us of codec compute per hop vs ~7.5 ms saved
+    assert inp.with_wire("int8").codec_s == pytest.approx(3.1e-5)
+    assert inp.codec_s == 0.0                     # 'none' costs nothing
+    slow = dataclasses.replace(inp, codec_s_per_byte=1e-9)  # ~31 ms/hop
+    plan = choose_plan(slow, wire_candidates=list(WIRE_AUTO))
+    assert plan.wire_dtype == "none"
+    # the chosen codec on the real fixture saves more than it costs
+    chosen = choose_plan(inp, wire_candidates=list(WIRE_AUTO))
+    ci = chosen.inputs
+    saved = (inp.link_s - ci.wire_link_s) \
+        + (inp.link_s - ci.wire_link_bwd_s)
+    assert ci.codec_s * 2 < saved
+
+
+def test_as_wireless_rejects_directional_codec():
+    """The wireless eq-(8) bridge has one cut-byte volume for both
+    directions; a topk codec must raise, not silently average."""
+    inp = fixture_inputs().with_wire("int8+topk0.25")
+    with pytest.raises(ValueError, match="topk"):
+        as_wireless(inp, 8, 1)
+    # dense codecs still bridge exactly, codec compute included
+    inp8 = fixture_inputs().with_wire("int8")
+    assert batch_wall_time(*as_wireless(inp8, 8, 1)) == pytest.approx(
+        plan_wall_time(inp8, 8, 1), rel=1e-12)
+
+
 def test_record_d_model_sets_wire_block():
     rec = fixture_record()
     rec["d_model"] = 96
@@ -369,10 +459,15 @@ def test_codec_plan_strictly_improves_and_moves_argmin():
 def test_choose_plan_wire_candidates_joint():
     inp = fixture_inputs()
     plan = choose_plan(inp, wire_candidates=list(WIRE_AUTO))
-    assert plan.wire_dtype == "int8"      # tie vs fp8 -> earlier candidate
+    # the sparsified gradient hop wins the fixture argmin (strictly
+    # cheaper downlink than dense int8 at the same compute billing)
+    assert plan.wire_dtype == "int8+topk0.25"
     assert plan.wall_s <= choose_plan(inp).wall_s
-    assert plan.to_dict()["wire_dtype"] == "int8"
-    assert plan.inputs.wire_dtype == "int8"
+    assert plan.to_dict()["wire_dtype"] == "int8+topk0.25"
+    assert plan.inputs.wire_dtype == "int8+topk0.25"
+    # dense-only enumeration keeps the PR-5 tie-break (int8 over fp8)
+    dense = choose_plan(inp, wire_candidates=["none", "int8", "fp8"])
+    assert dense.wire_dtype == "int8"
     # pins still compose with codec enumeration
     pinned = choose_plan(inp, k_fixed=8, wire_candidates=list(WIRE_AUTO))
     assert pinned.k == 8 and pinned.wire_dtype in WIRE_AUTO
@@ -383,12 +478,19 @@ def test_choose_plan_wire_candidates_joint():
 def test_wire_plan_sweep_evidence():
     sweep = wire_plan_sweep(fixture_inputs())
     assert set(sweep["sweep"]) == set(WIRE_AUTO)
-    assert sweep["chosen"]["wire_dtype"] == "int8"
+    assert sweep["chosen"]["wire_dtype"] == "int8+topk0.25"
     none_row = sweep["sweep"]["none"]
     int8_row = sweep["sweep"]["int8"]
+    topk_row = sweep["sweep"]["int8+topk0.25"]
     assert none_row["wire_link_s"] / int8_row["wire_link_s"] >= 3.5
     assert int8_row["speedup_vs_none"] > 1.0
     assert none_row["speedup_vs_none"] == 1.0
+    # the sparsified downlink is strictly cheaper than its dense uplink,
+    # and the codec compute billing shows up in the evidence trail
+    assert topk_row["wire_link_bwd_s"] < topk_row["wire_link_s"]
+    assert topk_row["wall_s"] < int8_row["wall_s"]
+    assert topk_row["codec_s"] == int8_row["codec_s"] > 0.0
+    assert none_row["codec_s"] == 0.0
 
 
 def test_record_with_codec_unscales_to_baseline_link():
@@ -448,7 +550,7 @@ def test_pipeline_spec_auto_plan_wire():
     from repro.parallel.pipeline import PipelineSpec
     spec, plan = PipelineSpec.auto_plan(fixture_record(),
                                         wire_dtype="auto")
-    assert spec.wire_dtype == plan.wire_dtype == "int8"
+    assert spec.wire_dtype == plan.wire_dtype == "int8+topk0.25"
     spec2, _ = PipelineSpec.auto_plan(fixture_record(), wire_dtype="fp8")
     assert spec2.wire_dtype == "fp8"
     spec3, plan3 = PipelineSpec.auto_plan(fixture_record())
@@ -577,7 +679,7 @@ def test_resolve_wire_flag_and_auto():
         plan_roofline=FIXTURE)
     assert (spec.microbatches, spec.virtual_stages) == (8, 1)
     assert info["wire_source"] == "auto"
-    assert spec.wire_dtype == info["plan"]["wire_dtype"] == "int8"
+    assert spec.wire_dtype == info["plan"]["wire_dtype"] == "int8+topk0.25"
 
 
 def test_resolve_wire_rejects_bad_combinations():
@@ -622,9 +724,14 @@ def test_cli_wire_auto(tmp_path):
     out = tmp_path / "plan.json"
     plan = main(["--roofline", FIXTURE, "--wire", "auto",
                  "--out", str(out)])
-    assert plan.wire_dtype == "int8"
+    assert plan.wire_dtype == "int8+topk0.25"
     doc = json.loads(out.read_text())
-    assert doc["plan"]["wire_dtype"] == "int8"
+    assert doc["plan"]["wire_dtype"] == "int8+topk0.25"
+    # free-form --wire takes the grammar, including explicit topk names
+    plan = main(["--roofline", FIXTURE, "--wire", "fp8+topk0.5"])
+    assert plan.wire_dtype == "fp8+topk0.5"
+    with pytest.raises(ValueError, match="wire_dtype"):
+        main(["--roofline", FIXTURE, "--wire", "int4"])
 
 
 # ---------------------------------------------------------------------------
