@@ -1,0 +1,54 @@
+"""Staticcheck gate bench: the device-free slice of the pipeline
+invariant auditor as a deterministic bench row.
+
+Runs the jaxpr-level audit over the full fixture matrix (both hop
+directions x four wire grammars x v in {1,2}, on whichever shard_map
+lowering this interpreter selects), the planner byte-model
+reconciliation, the roofline-record honesty round-trip and the AST lint
+pack — and returns counts that must be bit-stable, so the committed
+``BENCH_pipeline.json`` row catches codec/planner/schedule drift through
+the ordinary ``run.py --diff`` path as well as the dedicated CI
+staticcheck job.  The compiled-HLO level needs forced host devices
+before jax imports, so it lives in the ``staticcheck`` CI job
+(``python -m repro.analysis.staticcheck --level full``), not here.
+"""
+from __future__ import annotations
+
+
+def main(quick: bool = True):
+    from repro.analysis import staticcheck
+    from repro.analysis.lint import lint_paths
+
+    violations, cells = staticcheck.audit_cells(level="jaxpr")
+    model_violations = staticcheck.audit_byte_model(act_bytes=4.0,
+                                                    d_model=2560)
+    import json
+    import os
+    with open(staticcheck.ROOFLINE_FIXTURE) as f:
+        record = json.load(f)
+    rec_violations, rec_stats = staticcheck.audit_record_honesty(record)
+    lint = lint_paths([os.path.join(os.path.dirname(__file__), "..",
+                                    "src", "repro")])
+    out = {
+        "cells": len(cells),
+        "violations": len(violations),
+        "byte_model_cases": 2 * len(staticcheck.AUDIT_WIRES),
+        "byte_model_violations": len(model_violations),
+        "record_violations": len(rec_violations),
+        "record_ticks": rec_stats.get("ticks0"),
+        "record_pp_rebilled_ratio": (
+            rec_stats["rebilled_pp_bytes"] / rec_stats["measured_pp_bytes"]
+            if rec_stats.get("measured_pp_bytes") else None),
+        "lint_violations": len(lint),
+        "ok": not (violations or model_violations or rec_violations
+                   or lint),
+    }
+    print(f"staticcheck gate: {out['cells']} cells, "
+          f"{out['violations']} audit / {out['byte_model_violations']} "
+          f"byte-model / {out['record_violations']} record / "
+          f"{out['lint_violations']} lint violation(s)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -134,6 +134,62 @@ def parse_hlo(text: str) -> dict:
     return comps
 
 
+def while_reachable(comps: dict) -> set:
+    """Names of computations that execute INSIDE some ``while`` op — the
+    bodies/conditions of every while plus everything they transitively
+    call.  This is the scope the pipeline auditor
+    (``repro.analysis.staticcheck``) restricts itself to: collectives at
+    entry (replicated embedding/LM-head grad reductions, GSPMD input
+    reshards) are legitimate; inside the tick loop only the pipeline hop
+    may touch the wire."""
+    seeds: list = []
+    for instrs in comps.values():
+        for ins in instrs:
+            if ins.opcode == "while":
+                seeds.extend(ins.called_computations())
+    reach = set()
+    frontier = [c for c in seeds if c in comps]
+    while frontier:
+        name = frontier.pop()
+        if name in reach:
+            continue
+        reach.add(name)
+        for ins in comps[name]:
+            frontier.extend(c for c in ins.called_computations()
+                            if c in comps and c not in reach)
+    return reach
+
+
+def result_shape(rtype: str):
+    """First ``(dtype, dims)`` of a result type string.
+
+    For sync collectives this is the result itself; for the async
+    ``-start`` spelling, whose result is a ``(operand, result, ...)``
+    tuple, it is the operand — either way exactly ONE wire copy of the
+    payload, which is what byte-honesty accounting needs (``_type_bytes``
+    on the full tuple would double-count).
+    """
+    m = _SHAPE_RE.search(rtype)
+    if not m:
+        return None
+    return m.group(1), tuple(int(d) for d in m.group(2).split(",") if d)
+
+
+def source_target_pairs(rest: str):
+    """``source_target_pairs={{0,2},{1,3}}`` -> [(0, 2), (1, 3)] (empty
+    list when the attribute is absent)."""
+    m = _STP_RE.search(rest)
+    if not m:
+        return []
+    pairs = []
+    for chunk in m.group(1).split("},{"):
+        ids = [int(x) for x in chunk.replace("{", "").replace("}", "")
+               .split(",") if x.strip()]
+        if len(ids) == 2:
+            pairs.append((ids[0], ids[1]))
+    return pairs
+
+
 def computation_multipliers(comps: dict) -> dict:
     """Propagate loop trip counts down the call graph."""
     mult = {name: 0.0 for name in comps}
@@ -168,7 +224,10 @@ _METADATA_RE = re.compile(r'op_name="([^"]*)"')
 _RG_IOTA_RE = re.compile(
     r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
 _RG_LIST_RE = re.compile(r"replica_groups=\{\{([\d,{}\s]*)\}\}")
-_STP_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+# lazy up to the closing "}}" so EVERY pair is captured ("{0,2},{1,3"),
+# not just the text before the first "}" (which would drop all but the
+# first pair and blind any per-pair analysis of multi-pair permutes)
+_STP_RE = re.compile(r"source_target_pairs=\{(.*?)\}\}")
 
 
 def _crosses_pod(rest: str, pod_size: int) -> bool:

@@ -1,0 +1,5 @@
+"""Repo-specific AST lint rules ruff cannot express (tracer discipline
+in ``_tick_loop``-reachable code, pallas interpret plumbing).  See
+``repro.analysis.lint.rules`` and docs/staticcheck.md."""
+from repro.analysis.lint.rules import (  # noqa: F401
+    RULES, LintViolation, lint_paths, lint_source)

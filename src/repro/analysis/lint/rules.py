@@ -1,0 +1,294 @@
+"""AST rule pack: repo-specific jax discipline ruff has no rules for.
+
+The rules target the failure modes that actually bit (or nearly bit)
+this codebase:
+
+  * ``tracer-branch`` — Python ``if``/``while`` on a value derived from
+    ``jnp``/``lax`` inside code reachable from the pipeline's
+    ``_tick_loop``.  Under ``lax.scan`` those are tracers; branching on
+    one raises ``ConcretizationTypeError`` at trace time — or worse,
+    silently bakes in one branch when the value happens to be static on
+    the first trace.
+  * ``tracer-concretize`` — ``float()``/``int()``/``bool()`` or
+    ``np.asarray``/``np.array`` applied to a tracer-derived value in the
+    same reachable scope (host round-trip that cannot lower).
+  * ``nested-jit`` — a ``jax.jit`` call inside ``_tick_loop``-reachable
+    code: jit-under-scan retraces per tick and defeats the single
+    compiled tick loop the schedule costs assume.
+  * ``pallas-interpret`` — a ``pallas_call`` invocation without an
+    ``interpret`` keyword.  Every kernel in ``repro.kernels`` must
+    plumb ``interpret=interpret`` so CPU/CI runs take the interpreter
+    path (the repo's off-TPU contract, see kernels/ops.py).
+
+Reachability is a deliberately simple over-approximation: a cross-module
+call graph on *simple function names* (``f(...)`` or ``mod.f(...)`` both
+edge to every ``def f``), BFS'd from ``_tick_loop``; nested ``def``s of a
+reachable function are scanned as part of its subtree.  Taint is equally
+conservative the other way: only names ASSIGNED from a ``jnp``/``lax``
+(or ``jax.numpy``/``jax.lax``/``jax.nn``/``jax.random``) expression are
+tracers — function parameters are not, ``x.shape``/``.dtype``/``.ndim``
+projections are not, and ``is None`` tests are exempt — so the pack runs
+clean on the real tick loop (branching on ``spec`` fields, ``ef_t is not
+None``, static shape arithmetic) while still catching the seeded corpus.
+
+Stdlib-only on purpose: the lint must run before any jax exists.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+
+RULES = ("tracer-branch", "tracer-concretize", "nested-jit",
+         "pallas-interpret")
+
+#: call-graph root: everything transitively callable from the tick loop
+#: runs under ``lax.scan`` tracing.
+REACHABILITY_ROOT = "_tick_loop"
+
+#: module roots whose call results are tracers
+_TAINT_ROOTS = {"jnp", "lax"}
+_JAX_TAINT_SUBMODULES = {"numpy", "lax", "nn", "random"}
+
+#: jnp/lax attributes that return static python values, not tracers
+_STATIC_FUNCS = {"shape", "ndim", "size", "result_type", "dtype",
+                 "issubdtype", "iinfo", "finfo", "can_cast"}
+
+#: attribute projections of a tracer that are static metadata
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "aval", "itemsize",
+                 "sharding"}
+
+_CONCRETIZERS = {"float", "int", "bool"}
+_NP_ROOTS = {"np", "numpy", "onp"}
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    path: str
+    line: int
+    rule: str       # one of RULES
+    detail: str
+
+
+def _attr_chain(node):
+    """``jax.lax.scan`` -> ("jax", "lax", "scan"); None if not a pure
+    Name/Attribute chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _is_taint_call(func) -> bool:
+    chain = _attr_chain(func)
+    if not chain:
+        return False
+    root = chain[0]
+    if root in _TAINT_ROOTS or (
+            root == "jax" and len(chain) > 2
+            and chain[1] in _JAX_TAINT_SUBMODULES):
+        return chain[-1] not in _STATIC_FUNCS
+    return False
+
+
+class _Taint:
+    """Per-function tracer taint: names assigned from jnp/lax-derived
+    expressions (parameters deliberately untainted)."""
+
+    def __init__(self):
+        self.names: set = set()
+
+    def expr_tainted(self, node) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Call):
+            if _is_taint_call(node.func):
+                return True
+            # indexing-style helpers (x.at[...].set) keep taint
+            return self.expr_tainted(node.func)
+        if isinstance(node, ast.Subscript):
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.BinOp):
+            return (self.expr_tainted(node.left)
+                    or self.expr_tainted(node.right))
+        if isinstance(node, ast.UnaryOp):
+            return self.expr_tainted(node.operand)
+        if isinstance(node, ast.Compare):
+            return (self.expr_tainted(node.left)
+                    or any(self.expr_tainted(c) for c in node.comparators))
+        if isinstance(node, ast.BoolOp):
+            return any(self.expr_tainted(v) for v in node.values)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr_tainted(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return (self.expr_tainted(node.body)
+                    or self.expr_tainted(node.orelse))
+        return False
+
+    def assign(self, targets, value):
+        if not self.expr_tainted(value):
+            return
+        for t in targets:
+            for n in ast.walk(t):
+                if isinstance(n, ast.Name):
+                    self.names.add(n.id)
+
+
+def _is_exempt_test(node) -> bool:
+    """``x is None`` / ``x is not None`` are static even on tracers."""
+    return isinstance(node, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops)
+
+
+def _called_names(fn_node):
+    """Simple names this function's subtree calls (call-graph edges) —
+    including bare-name references passed as arguments (higher-order
+    plumbing like ``run_stage``)."""
+    out = set()
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if chain:
+                out.add(chain[-1])
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Name):
+                    out.add(arg.id)
+    return out
+
+
+def _scan_reachable_fn(path, fn_node, violations):
+    """Apply the tracer-discipline rules to one reachable function's
+    subtree (nested defs included — they trace in the same scan)."""
+    taint = _Taint()
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Assign):
+            taint.assign(node.targets, node.value)
+        elif isinstance(node, ast.AugAssign):
+            taint.assign([node.target], node.value)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            taint.assign([node.target], node.value)
+    for node in ast.walk(fn_node):
+        if isinstance(node, (ast.If, ast.While)):
+            test = node.test
+            if not _is_exempt_test(test) and taint.expr_tainted(test):
+                kw = "while" if isinstance(node, ast.While) else "if"
+                violations.append(LintViolation(
+                    path, node.lineno, "tracer-branch",
+                    f"python `{kw}` on a jnp/lax-derived value inside "
+                    f"{REACHABILITY_ROOT}-reachable `{fn_node.name}` — "
+                    "use lax.cond/jnp.where"))
+        elif isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if not chain:
+                continue
+            if chain == ("jax", "jit") or chain[-1] == "jit" and \
+                    chain[0] == "jax":
+                violations.append(LintViolation(
+                    path, node.lineno, "nested-jit",
+                    f"jax.jit inside {REACHABILITY_ROOT}-reachable "
+                    f"`{fn_node.name}` — jit-under-scan retraces every "
+                    "tick; hoist it out of the tick loop"))
+            elif (len(chain) == 1 and chain[0] in _CONCRETIZERS) or \
+                    (len(chain) == 2 and chain[0] in _NP_ROOTS
+                     and chain[1] in ("asarray", "array")):
+                if any(taint.expr_tainted(a) for a in node.args):
+                    violations.append(LintViolation(
+                        path, node.lineno, "tracer-concretize",
+                        f"{'.'.join(chain)}() on a jnp/lax-derived value "
+                        f"inside {REACHABILITY_ROOT}-reachable "
+                        f"`{fn_node.name}` — host concretization cannot "
+                        "lower under scan"))
+
+
+def _scan_pallas_calls(path, tree, violations):
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if not chain or chain[-1] != "pallas_call":
+            continue
+        kws = {kw.arg for kw in node.keywords}
+        if "interpret" not in kws and None not in kws:  # None = **kwargs
+            violations.append(LintViolation(
+                path, node.lineno, "pallas-interpret",
+                "pallas_call without an `interpret` keyword — kernels "
+                "must plumb interpret=interpret so off-TPU runs take "
+                "the interpreter path (kernels/ops.py contract)"))
+
+
+def _collect_py(paths):
+    files = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+        else:
+            for root, _dirs, names in os.walk(p):
+                if "__pycache__" in root:
+                    continue
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+    return sorted(set(files))
+
+
+def lint_sources(sources: dict):
+    """Lint a ``{path: source_text}`` mapping as one corpus (reachability
+    crosses file boundaries).  Returns a list of ``LintViolation``."""
+    trees = {}
+    violations = []
+    for path, src in sorted(sources.items()):
+        try:
+            trees[path] = ast.parse(src, filename=path)
+        except SyntaxError as e:
+            violations.append(LintViolation(
+                path, e.lineno or 0, "tracer-branch",
+                f"unparseable: {e.msg}"))
+    # def registry + call edges by simple name
+    defs: dict = {}       # name -> [(path, fn_node)]
+    for path, tree in trees.items():
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, []).append((path, node))
+    reachable = []
+    seen = set()
+    frontier = [REACHABILITY_ROOT]
+    while frontier:
+        name = frontier.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        for path, fn in defs.get(name, ()):
+            reachable.append((path, fn))
+            frontier.extend(n for n in _called_names(fn) if n not in seen)
+    scanned = set()
+    for path, fn in reachable:
+        key = (path, fn.lineno, fn.name)
+        if key in scanned:
+            continue
+        scanned.add(key)
+        _scan_reachable_fn(path, fn, violations)
+    for path, tree in trees.items():
+        _scan_pallas_calls(path, tree, violations)
+    violations.sort(key=lambda v: (v.path, v.line, v.rule))
+    return violations
+
+
+def lint_source(src: str, path: str = "<string>"):
+    """Lint one source string (tests/corpus convenience)."""
+    return lint_sources({path: src})
+
+
+def lint_paths(paths):
+    """Lint files/directories as one corpus."""
+    sources = {}
+    for f in _collect_py(paths):
+        with open(f, encoding="utf-8") as fh:
+            sources[f] = fh.read()
+    return lint_sources(sources)

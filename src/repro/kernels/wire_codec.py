@@ -36,6 +36,19 @@ from jax.experimental import pallas as pl
 from repro.training.compress import payload_dtype, qmax_for
 
 
+# On-wire HLO element type of the quantized payload each base codec puts
+# on the hop (what the ppermute'd buffer must spell in compiled HLO).
+# fp8 payloads are ``s8`` too: ``wire._wire_ppermute`` bitcasts 1-byte
+# float payloads to int8 around the collective so no backend
+# legalization can re-inflate the wire (XLA:CPU upcasts f8 collectives
+# to f16).  The kernel layer owns the payload format, so the canonical
+# mapping lives here; ``repro.analysis.staticcheck`` mirrors it
+# numpy-only (this module imports jax/pallas) and a tier-1 test pins the
+# two copies together — change one without the other and the auditor's
+# contract test fails.
+PAYLOAD_HLO_DTYPE = {"int8": "s8", "fp8": "s8"}
+
+
 def wire_block(dim: int, block: int = 256) -> int:
     """Largest block size <= ``block`` dividing ``dim`` (no padding)."""
     b = min(block, max(dim, 1))

@@ -189,6 +189,29 @@ def _sigma(m: int, num_stages: int, virtual_stages: int) -> int:
         + (m % num_stages)
 
 
+def hop_perms(spec: PipelineSpec):
+    """The tick schedule's inter-stage hop permutations on the pod axis:
+    ``(forward, backward)`` tuples of ``(src, dst)`` pairs.
+
+    This is the single source of truth the tick loop ships on — acyclic
+    chain for v == 1 (the last stage has no successor), cyclic for v > 1
+    (the chunk chain wraps from stage S-1 back to stage 0) — and the
+    backward permutation is the transpose (reversed pairs), which is what
+    ``wire.coded_ppermute``'s custom_vjp codes the gradient hop with.
+    ``repro.analysis.staticcheck.expected_hop_perms`` mirrors it
+    numpy-only so the auditor can verify lowered jaxpr/HLO against the
+    schedule without importing this (jax-importing) module.
+    """
+    s = spec.num_stages
+    if s <= 1:
+        return (), ()
+    if spec.virtual_stages > 1:
+        fwd = tuple((i, (i + 1) % s) for i in range(s))
+    else:
+        fwd = tuple((i, i + 1) for i in range(s - 1))
+    return fwd, tuple((dst, src) for src, dst in fwd)
+
+
 def _check_mesh(mesh, spec: PipelineSpec):
     if spec.axis not in mesh.shape:
         raise ValueError(
@@ -317,6 +340,7 @@ def _tick_loop(spec, stage, k, xs_full, enc_full, state0, aux0, run_stage,
     s_stages = spec.num_stages
     v = spec.virtual_stages
     ticks = _sigma(k - 1, s_stages, v) + s_stages * v
+    fwd_perm, _ = hop_perms(spec)
     coded = spec.wire_dtype not in (None, "none")
     base_wire = spec.wire_dtype
     if coded:
@@ -334,8 +358,8 @@ def _tick_loop(spec, stage, k, xs_full, enc_full, state0, aux0, run_stage,
             return jax.lax.ppermute(y, spec.axis, perm)
         if ef_t is not None:
             return wire.coded_ppermute_ef(spec.wire_dtype, spec.axis,
-                                          tuple(perm), y, ef_t)
-        return wire.coded_ppermute(base_wire, spec.axis, tuple(perm), y)
+                                          perm, y, ef_t)
+        return wire.coded_ppermute(base_wire, spec.axis, perm, y)
 
     def tick(carry, xt):
         state, aux_acc = carry
@@ -360,11 +384,8 @@ def _tick_loop(spec, stage, k, xs_full, enc_full, state0, aux0, run_stage,
         y, aux = run_stage(cur, enc, j_idx)
         if s_stages == 1:
             nxt = y                            # chunk chain stays local
-        elif v > 1:
-            nxt = hop(y, [(i, (i + 1) % s_stages)
-                          for i in range(s_stages)], ef_t)
         else:
-            nxt = hop(y, [(i, i + 1) for i in range(s_stages - 1)], ef_t)
+            nxt = hop(y, fwd_perm, ef_t)
         aux_acc = aux_acc + jnp.where(live, aux, 0.0)
         return (nxt, aux_acc), y
 

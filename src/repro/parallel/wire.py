@@ -221,9 +221,28 @@ def roundtrip(x, wire_dtype: str, impl: str = "auto"):
     return decode(q, s, x.dtype, impl)
 
 
+def _wire_ppermute(q, axis_name, perm):
+    """ppermute a quantized payload at its declared wire width.
+
+    One-byte FLOAT payloads (fp8-e4m3) ride the collective bitcast to
+    int8: backends without f8 collective support (XLA:CPU today)
+    otherwise legalize the ppermute by upcasting to f16 — silently
+    doubling the hop bytes the planner billed.  The bitcast is free on
+    both ends and pins the wire to exactly one byte per element, which
+    is the invariant ``repro.analysis.staticcheck`` audits in compiled
+    HLO (PAYLOAD_HLO_DTYPE: every coded payload spells ``s8`` on the
+    wire)."""
+    dt = q.dtype
+    if jnp.issubdtype(dt, jnp.floating) and dt.itemsize == 1:
+        raw = jax.lax.bitcast_convert_type(q, jnp.int8)
+        raw = jax.lax.ppermute(raw, axis_name, perm)
+        return jax.lax.bitcast_convert_type(raw, dt)
+    return jax.lax.ppermute(q, axis_name, perm)
+
+
 def _coded_hop(wire_dtype, axis_name, perm, x):
     q, s = encode(x, wire_dtype)
-    q = jax.lax.ppermute(q, axis_name, perm)
+    q = _wire_ppermute(q, axis_name, perm)
     if s is not None:
         s = jax.lax.ppermute(s, axis_name, perm)
     return decode(q, s, x.dtype)
@@ -317,7 +336,7 @@ def _topk_hop(wire_dtype, axis_name, perm, g):
     d = g.shape[-1]
     q, idx, scale = topk_encode(g, wire_dtype)
     dec_local = topk_decode(q, idx, scale, d, jnp.float32)
-    q = jax.lax.ppermute(q, axis_name, perm)
+    q = _wire_ppermute(q, axis_name, perm)
     idx = jax.lax.ppermute(idx, axis_name, perm)
     scale = jax.lax.ppermute(scale, axis_name, perm)
     return topk_decode(q, idx, scale, d, jnp.float32), dec_local

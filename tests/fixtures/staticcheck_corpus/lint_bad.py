@@ -1,0 +1,31 @@
+"""Seeded-violation corpus for the AST lint pack (``--selftest``).
+
+Every rule in ``repro.analysis.lint.RULES`` must fire on this module —
+one deliberate defect per rule, inside a function named ``_tick_loop``
+so the reachability root matches.  NOT importable production code; the
+ruff gate ignores it (per-file-ignores in ruff.toml) and the staticcheck
+selftest asserts the exact rule set that fires.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tick_loop(state, steps):
+    y = jnp.sum(state)
+    if y > 0:                       # tracer-branch: python `if` on a tracer
+        y = y + 1.0
+    thr = float(y)                  # tracer-concretize: host round-trip
+    step = jax.jit(lambda t: t + thr)   # nested-jit: retraces every tick
+    for _ in range(steps):
+        y = step(y)
+    return y
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def run(x):
+    # pallas-interpret: no `interpret` keyword plumbed
+    return pl.pallas_call(_copy_kernel, out_shape=x)(x)

@@ -1,0 +1,378 @@
+"""Pipeline invariant auditor (repro.analysis.staticcheck) and its AST
+lint pack.
+
+Fast lane: the numpy-only detectors against seeded defects (each must
+produce EXACTLY ONE violation of the right class), the mirror-sync
+contracts pinning the auditor's numpy copies to the jax-side sources of
+truth, the seeded corpus, the jaxpr-level audit of the live lowering,
+and the report diff.  Slow lane: the compiled-HLO audit (8-device
+subprocess) against the committed green baseline, and the fixture
+regeneration helper."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import staticcheck
+from repro.analysis.lint import RULES, lint_paths, lint_source
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+CORPUS = os.path.join(os.path.dirname(__file__), "fixtures",
+                      "staticcheck_corpus")
+
+
+def run_sub(code: str, devices: int = 8, timeout=600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def only(violations, cls):
+    """Assert exactly one violation, of class ``cls``, and return it."""
+    assert len(violations) == 1, [(v.cls, v.detail) for v in violations]
+    assert violations[0].cls == cls, violations[0]
+    return violations[0]
+
+
+# ---------------------------------------------------------------------------
+# mirror-sync contracts: the auditor's numpy copies == jax-side truth
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s,v", [(1, 1), (2, 1), (2, 2), (4, 1), (4, 3)])
+def test_expected_hop_perms_mirrors_pipeline(s, v):
+    from repro.parallel.pipeline import PipelineSpec, hop_perms
+    spec = PipelineSpec(num_stages=s, microbatches=s + 1, virtual_stages=v)
+    assert hop_perms(spec) == staticcheck.expected_hop_perms(s, v)
+
+
+def test_payload_hlo_dtype_mirrors_kernel_layer():
+    from repro.kernels.wire_codec import PAYLOAD_HLO_DTYPE
+    assert staticcheck.PAYLOAD_HLO_DTYPE == PAYLOAD_HLO_DTYPE
+
+
+def test_hop_perms_shapes():
+    fwd, bwd = staticcheck.expected_hop_perms(4, 1)
+    assert fwd == ((0, 1), (1, 2), (2, 3)) and bwd[0] == (1, 0)
+    fwd, bwd = staticcheck.expected_hop_perms(4, 2)
+    assert (3, 0) in fwd and (0, 3) in bwd
+    assert staticcheck.expected_hop_perms(1, 1) == ((), ())
+
+
+# ---------------------------------------------------------------------------
+# detector negatives: one seeded defect -> exactly one classified violation
+# ---------------------------------------------------------------------------
+
+
+def test_perm_bijection_detector():
+    assert staticcheck.check_perm_bijection(((0, 1), (1, 0)), 2) == []
+    only(staticcheck.check_perm_bijection(((0, 1), (1, 1)), 2),
+         "ppermute-bijection")        # destination collision
+    only(staticcheck.check_perm_bijection(((0, 1), (0, 2)), 4),
+         "ppermute-bijection")        # duplicate source
+    only(staticcheck.check_perm_bijection(((0, 5),), 4),
+         "ppermute-bijection")        # endpoint off the axis
+
+
+def test_perm_schedule_detector():
+    assert staticcheck.check_perm_schedule(((0, 1), (1, 2)), 3, 1) == []
+    assert staticcheck.check_perm_schedule(((1, 0), (2, 1)), 3, 1) == []
+    cyc = ((0, 1), (1, 2), (2, 0))
+    assert staticcheck.check_perm_schedule(cyc, 3, 2) == []
+    # bijective but not the schedule's hop: v=1 must NOT wrap
+    only(staticcheck.check_perm_schedule(cyc, 3, 1), "ppermute-schedule")
+
+
+def test_payload_classifier_forged_f32():
+    c = staticcheck.hop_contract("int8", "float32", 64)
+    assert staticcheck.classify_hop_payload(c, "s8", (1, 16, 1, 64)) == []
+    assert staticcheck.classify_hop_payload(c, "f32", (1, 16, 1, 1)) == []
+    only(staticcheck.classify_hop_payload(c, "f32", (1, 16, 64)),
+         "wire-payload-dtype")
+
+
+def test_payload_classifier_index_dtype():
+    c = staticcheck.hop_contract("int8+topk0.25", "float32", 64)
+    assert c["idx_hlo"] == "s16" and c["kk"] == 16
+    assert staticcheck.classify_hop_payload(c, "s16", (1, 16, 16)) == []
+    only(staticcheck.classify_hop_payload(c, "s32", (1, 16, 16)),
+         "wire-index-dtype")
+    dense = staticcheck.hop_contract("int8", "float32", 64)
+    only(staticcheck.classify_hop_payload(dense, "s16", (1, 16, 16)),
+         "wire-index-dtype")          # indices on a dense hop
+
+
+def test_payload_classifier_net_loss_fallback():
+    # d=3 -> block 3 -> 1+4/3 > f16's 2 bytes: raw f16 is the declared
+    # fallback, not a forgery
+    c = staticcheck.hop_contract("int8", "float16", 3)
+    assert c["net_loss"]
+    assert staticcheck.classify_hop_payload(c, "f16", (4, 3)) == []
+
+
+def test_byte_model_green_and_single_perturbation():
+    assert staticcheck.audit_byte_model(act_bytes=4.0, d_model=2560) == []
+    assert staticcheck.audit_byte_model(act_bytes=4.0, d_model=64) == []
+    only(staticcheck.check_byte_model("int8", "fwd", payload_bytes=2.0),
+         "wire-bytes-model")
+    only(staticcheck.check_byte_model("int8+topk0.25", "bwd",
+                                      d_model=2560, index_bytes=3.0),
+         "wire-bytes-model")
+    only(staticcheck.check_byte_model("fp8", "bwd", scale_bytes=5.0),
+         "wire-bytes-model")
+
+
+def test_record_honesty_roundtrip_and_planner_drift(monkeypatch):
+    with open(os.path.join(ROOT, "tests", "fixtures",
+                           "roofline_smoke.json")) as f:
+        record = json.load(f)
+    violations, stats = staticcheck.audit_record_honesty(record)
+    assert violations == []
+    assert stats["rebilled_pp_bytes"] == pytest.approx(
+        stats["measured_pp_bytes"], rel=1e-9)
+    assert stats["ticks0"] == staticcheck.expected_schedule_ticks(
+        record["pipeline_k"], stats["num_stages"], stats["v0"])
+    # simulate planner schedule-math drift (an off-by-one in the billed
+    # tick count): the independent mirror must catch it
+    from repro.analysis import autotune
+    real = autotune.schedule_ticks
+    monkeypatch.setattr(autotune, "schedule_ticks",
+                        lambda k, s, v: real(k, s, v) + 1)
+    violations, _ = staticcheck.audit_record_honesty(record)
+    assert [v.cls for v in violations] == ["wire-bytes"]
+
+
+# ---------------------------------------------------------------------------
+# seeded HLO corpus
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fname,cls,checks,wire", [
+    ("hlo_forged_f32_hop.txt", "wire-payload-dtype", ("payload",), "int8"),
+    ("hlo_sharding_leak.txt", "sharding-leak", ("leak",), "none"),
+    ("hlo_nonbijective.txt", "ppermute-bijection", ("perm",), "none"),
+])
+def test_seeded_hlo_corpus(fname, cls, checks, wire):
+    with open(os.path.join(CORPUS, fname)) as f:
+        text = f.read()
+    violations, _ = staticcheck.audit_hlo_text(
+        text, pod_size=4, num_stages=2, virtual_stages=1,
+        wire_dtype=wire, d_model=64, checks=checks)
+    only(violations, cls)
+
+
+def test_hlo_byte_honesty_detects_missing_direction():
+    """The forged-hop fixture carries only ONE f32 hop per tick; billing
+    both directions of a 'none' wire over 1024 elements expects 8192 B
+    but the text ships 4096 — the bytes check must fire (and reconcile
+    when the expectation matches what is actually on the wire)."""
+    with open(os.path.join(CORPUS, "hlo_forged_f32_hop.txt")) as f:
+        text = f.read()
+    violations, stats = staticcheck.audit_hlo_text(
+        text, pod_size=4, num_stages=2, virtual_stages=1,
+        wire_dtype="none", d_model=64, hop_elems=1024, checks=("bytes",))
+    assert stats["hop_bytes_per_tick"] == 4096
+    only(violations, "wire-bytes")
+    violations, _ = staticcheck.audit_hlo_text(
+        text, pod_size=4, num_stages=2, virtual_stages=1,
+        wire_dtype="none", d_model=64, hop_elems=512, checks=("bytes",))
+    assert violations == []
+
+
+def test_within_pod_permute_is_a_reshard_not_a_hop():
+    with open(os.path.join(CORPUS, "hlo_forged_f32_hop.txt")) as f:
+        text = f.read()
+    # shrink pods to 8 devices/pod: every pair is now within-pod -> no
+    # hop CPs at all, nothing to audit
+    violations, stats = staticcheck.audit_hlo_text(
+        text, pod_size=8, num_stages=1, virtual_stages=1,
+        wire_dtype="int8", d_model=64)
+    assert stats["n_hop_cp"] == 0 and stats["n_local_cp"] == 1
+    assert violations == []
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp residual contract
+# ---------------------------------------------------------------------------
+
+
+def test_wire_custom_vjp_contracts_green():
+    for wire in ("int8", "fp8", "int8+topk0.25"):
+        assert staticcheck.audit_wire_custom_vjp(wire) == []
+
+
+def test_broken_vjp_pair_fires():
+    import jax
+    import jax.numpy as jnp
+
+    def bad_fwd(x):
+        return x, jax.ShapeDtypeStruct(x.shape, "float32")
+
+    def bad_bwd(res, g):
+        return (g, jnp.zeros(res.shape, "bfloat16"))
+    violations = staticcheck.audit_custom_vjp_pair(
+        bad_fwd, bad_bwd, (jax.ShapeDtypeStruct((2, 8), "float32"),))
+    only(violations, "vjp-residual-dtype")
+
+
+# ---------------------------------------------------------------------------
+# lint pack
+# ---------------------------------------------------------------------------
+
+
+def test_lint_corpus_fires_every_rule():
+    violations = lint_paths([os.path.join(CORPUS, "lint_bad.py")])
+    assert sorted({v.rule for v in violations}) == sorted(RULES)
+
+
+def test_lint_real_tree_is_clean():
+    assert lint_paths([os.path.join(SRC, "repro")]) == []
+
+
+def test_lint_static_branches_not_flagged():
+    src = """
+import jax.numpy as jnp
+
+def _tick_loop(spec, ef_t, v):
+    if ef_t is not None:          # `is` test: exempt even on a tracer
+        ef_t = ef_t + 1.0
+    if v > 1:                     # parameter, never tainted
+        v = v - 1
+    y = jnp.ones((4,))
+    if y.shape[0] > 2:            # static metadata projection
+        v = v + 1
+    return ef_t, v
+"""
+    assert lint_source(src) == []
+
+
+def test_lint_tracer_branch_and_concretize_flagged():
+    src = """
+import numpy as np
+import jax.numpy as jnp
+
+def _tick_loop(x):
+    y = jnp.sum(x)
+    if y > 0:
+        y = y + 1
+    return np.asarray(y)
+"""
+    violations = lint_source(src)
+    assert [v.rule for v in violations] == ["tracer-branch",
+                                            "tracer-concretize"]
+
+
+def test_lint_reachability_scopes_tracer_rules():
+    # same defect in an unreachable function: tracer rules stay quiet
+    src = """
+import jax.numpy as jnp
+
+def helper(x):
+    y = jnp.sum(x)
+    if y > 0:
+        y = y + 1
+    return y
+"""
+    assert lint_source(src) == []
+
+
+# ---------------------------------------------------------------------------
+# jaxpr-level audit of the live lowering + selftest + report diff
+# ---------------------------------------------------------------------------
+
+
+def test_jaxpr_audit_matrix_green():
+    """Both hop directions x all four wire grammars x v in {1,2}, traced
+    through the abstract mesh on THIS interpreter's shard_map lowering:
+    zero violations, and every cell actually saw both hop directions."""
+    violations, cells = staticcheck.audit_cells(level="jaxpr")
+    assert violations == []
+    keys = {c["cell"] for c in cells}
+    for wire in staticcheck.AUDIT_WIRES:
+        for v in staticcheck.AUDIT_VS:
+            assert f"{wire}/v{v}" in keys
+    for c in cells:
+        if not c["cell"].startswith("vjp:"):
+            assert set(c["stats"]["directions"]) == {"fwd", "bwd"}, c
+
+
+def test_selftest_every_detector_fires():
+    fired = staticcheck.selftest()
+    assert len(fired) == 10
+
+
+def test_diff_report():
+    rep = {"ok": True, "by_class": {}, "cells": ["a", "b"]}
+    assert staticcheck.diff_report(dict(rep), dict(rep)) == []
+    tampered = {"ok": False, "by_class": {"wire-bytes": 1},
+                "cells": ["a"]}
+    fails = staticcheck.diff_report(tampered, rep)
+    assert len(fails) == 3
+
+
+def test_violation_class_is_closed():
+    with pytest.raises(ValueError):
+        staticcheck.Violation("not-a-class", "x", "y")
+
+
+# ---------------------------------------------------------------------------
+# slow lane: compiled-HLO audit + CLI + regen helper (8-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_full_cli_matches_committed_baseline():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)     # the CLI must set the device flag itself
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.staticcheck",
+         "--level", "full", "--report", "/tmp/staticcheck_ci.json",
+         "--diff", os.path.join(ROOT, "benchmarks",
+                                "STATICCHECK_baseline.json")],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=1200)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    with open("/tmp/staticcheck_ci.json") as f:
+        report = json.load(f)
+    assert report["ok"] and report["violations"] == []
+    assert any(c.startswith("hlo:") for c in report["cells"])
+
+
+@pytest.mark.slow
+def test_hlo_audit_bytes_reconcile_in_process():
+    out = run_sub("""
+        from repro.analysis.staticcheck import audit_cells
+        violations, cells = audit_cells(level='hlo',
+                                        wires=('int8', 'int8+topk0.25'),
+                                        vs=(1,))
+        assert not violations, [(v.cls, v.detail) for v in violations]
+        for c in cells:
+            st = c['stats']
+            if 'hop_bytes_per_tick' in st:
+                assert st['hop_bytes_per_tick'] == st['billed_bytes_per_tick']
+                print(c['cell'], st['hop_bytes_per_tick'])
+    """)
+    assert "int8/v1 2176" in out and "int8+topk0.25/v1 1920" in out
+
+
+@pytest.mark.slow
+def test_regen_helper_validates_this_leg():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    out = subprocess.run(
+        [sys.executable,
+         os.path.join(ROOT, "tests", "fixtures", "regen_hlo_fixtures.py"),
+         "--check"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "validates" in out.stdout
