@@ -94,13 +94,8 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
-    ap.add_argument("--pipeline-k", type=int, default=0)
-    ap.add_argument("--pipeline-v", type=int, default=1,
-                    help="interleaved virtual stages per pipeline stage")
-    ap.add_argument("--wire-dtype", default="none",
-                    help="wire codec on the pipeline hop "
-                         "(parallel/wire.py): none|int8|fp8, optionally "
-                         "'+topk<frac>' e.g. int8+topk0.25")
+    from repro.launch.plan_args import add_plan_args
+    add_plan_args(ap, flavor="lower", plan_out=False)
     ap.add_argument("--pipeline-auto", action="store_true",
                     help="run the roofline auto-planner on the lowered "
                          "cell and record hand-picked vs auto-picked "
@@ -134,7 +129,7 @@ def main():
         seq = True
     rec, prof = run_cell(args.arch, args.shape, args.mesh == "multi",
                          pipeline_k=args.pipeline_k,
-                         pipeline_v=args.pipeline_v,
+                         pipeline_v=args.virtual_stages,
                          wire_dtype=args.wire_dtype,
                          cast_gathers=args.cast_gathers, seq_shard=seq,
                          microbatches=args.microbatches,
@@ -164,7 +159,7 @@ def main():
     rec["label"] = args.label
     rec["knobs"] = {"cast_gathers": args.cast_gathers, "seq_shard": seq,
                     "pipeline_k": args.pipeline_k,
-                    "pipeline_v": args.pipeline_v,
+                    "pipeline_v": args.virtual_stages,
                     "wire_dtype": args.wire_dtype,
                     "pipeline_auto": args.pipeline_auto,
                     "microbatches": args.microbatches,

@@ -1,0 +1,96 @@
+"""Replan-drift bench: static plan vs online re-planning under a
+scripted mid-run bandwidth step.
+
+The AC²P²SL premise made measurable: the codec-aware roofline plan that
+is optimal at the pre-drift bandwidth is NOT optimal after the link
+degrades, and the hysteresis-gated re-planner
+(``repro.training.replan``) must (a) notice, (b) switch EXACTLY ONCE —
+no flapping on the EWMA's convergence tail — and (c) beat the static
+plan's cumulative wall time.  Deterministic and compile-free: the drift
+is a ``wireless.channel.bandwidth_step_trace``, per-step walls come from
+``autotune.plan_wall_time`` on the checked-in roofline fixture, and the
+re-planner sees the same EWMA-smoothed bandwidth feed every run — which
+is what lets CI diff the result against ``BENCH_pipeline.json``
+(compile cost is not billed: the ``PlanCellCache`` makes a revisited
+cell free, and a first visit is one compile amortized over the run).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "..", "tests",
+                       "fixtures", "roofline_smoke.json")
+
+STEPS = 200          # modeled training steps
+DROP_AT = 80         # the bandwidth step lands here
+DROP_FACTOR = 8.0    # link bandwidth divides by this
+
+
+def main(quick: bool = True):
+    from repro.analysis.autotune import (WIRE_AUTO, choose_plan,
+                                         plan_inputs_from_record,
+                                         plan_wall_time)
+    from repro.training.replan import ReplanConfig, Replanner, apply_hints
+    from repro.wireless.channel import bandwidth_step_trace
+
+    with open(FIXTURE) as f:
+        record = json.load(f)
+    inp = plan_inputs_from_record(record)
+    bw0 = inp.act_hop_bytes / inp.link_s     # implied pre-drift bandwidth
+    trace = bandwidth_step_trace(bw0, bw0 / DROP_FACTOR, DROP_AT)
+
+    static = choose_plan(inp, wire_candidates=WIRE_AUTO).plan
+    rp = Replanner(inp, static,
+                   ReplanConfig(every=10, hysteresis=0.1))
+
+    static_s = replanned_s = 0.0
+    post_static_s = post_replanned_s = 0.0
+    for step in range(1, STEPS + 1):
+        bw = trace.at(step)
+        rp.observe_bandwidth(bw)                 # EWMA-smoothed feed
+        rp.maybe_replan(step)
+        # bill BOTH runs at the true instantaneous link, not the EWMA
+        truth = apply_hints(inp, {"link_bw_Bps": bw})
+        w_static = plan_wall_time(truth.with_wire(static.wire_dtype),
+                                  static.k, static.v)
+        cur = rp.current
+        w_replan = plan_wall_time(truth.with_wire(cur.wire_dtype),
+                                  cur.k, cur.v)
+        static_s += w_static
+        replanned_s += w_replan
+        if step >= DROP_AT:
+            post_static_s += w_static
+            post_replanned_s += w_replan
+
+    out = {
+        "steps": STEPS,
+        "drop_step": DROP_AT,
+        "drop_factor": DROP_FACTOR,
+        "static_plan": static.to_json(),
+        "final_plan": rp.current.to_json(),
+        "switches": len(rp.switches),
+        "switch_step": rp.switches[0].step if rp.switches else None,
+        "switch_gain": rp.switches[0].gain if rp.switches else None,
+        "evals": rp.evals,
+        "static_wall_s": static_s,
+        "replanned_wall_s": replanned_s,
+        "speedup_vs_static": static_s / replanned_s,
+        "post_drop_speedup": post_static_s / post_replanned_s,
+    }
+    assert out["switches"] == 1, (
+        f"expected exactly one plan switch under a single bandwidth "
+        f"step, got {out['switches']} ({[s.to_json() for s in rp.switches]})")
+    assert out["replanned_wall_s"] < out["static_wall_s"], (
+        "re-planned run must beat the static plan under drift")
+    print(f"  static    {static}: {static_s * 1e3:9.2f} ms total")
+    print(f"  replanned {rp.current}: {replanned_s * 1e3:9.2f} ms total "
+          f"(switch @ step {out['switch_step']}, "
+          f"{out['switch_gain']:.0%} modeled gain)")
+    print(f"  speedup vs static: {out['speedup_vs_static']:.4f}x "
+          f"(post-drop {out['post_drop_speedup']:.4f}x)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -79,8 +79,8 @@ def main(argv=None):
     quick = not args.full
 
     from benchmarks import (ao_convergence, fig3_accuracy, fig4_ue_scaling,
-                            fig5_bandwidth, pipeline_plan, roofline_report,
-                            staticcheck_gate, wire_codec)
+                            fig5_bandwidth, pipeline_plan, replan_drift,
+                            roofline_report, staticcheck_gate, wire_codec)
 
     benches = {
         "fig4_ue_scaling": fig4_ue_scaling.main,
@@ -90,6 +90,7 @@ def main(argv=None):
         "roofline_report": roofline_report.main,
         "pipeline_plan": pipeline_plan.main,
         "wire_codec": wire_codec.main,
+        "replan_drift": replan_drift.main,
         "staticcheck_gate": staticcheck_gate.main,
     }
     selected = list(benches)

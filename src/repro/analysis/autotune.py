@@ -51,8 +51,9 @@ import json
 import numpy as np
 
 from repro.analysis.roofline import HW
+from repro.core import schedule as _sched
 from repro.core.costs import LayerProfile
-from repro.core.schedule import Plan, TaskTimes, bubble_rate, simulate_c2p2sl
+from repro.core.schedule import TaskTimes, bubble_rate, simulate_c2p2sl
 
 
 def _sigma(m: int, num_stages: int, virtual_stages: int) -> int:
@@ -204,6 +205,88 @@ def wire_link_scale_bwd(wire_dtype: str, act_bytes: float,
     forward scale under a ``+topk`` codec; identical for dense ones)."""
     return wire_bytes_per_element_bwd(wire_dtype, act_bytes, block,
                                       d_model) / float(act_bytes)
+
+
+# ---------------------------------------------------------------------------
+# The plan currency: one frozen value object for "which pipeline cell".
+# ---------------------------------------------------------------------------
+
+#: Version of the ``Plan.to_json`` schema.  Bump ONLY with a loader shim
+#: in ``Plan.from_json`` — dryrun records and ``--plan-out`` files embed
+#: this schema, and the re-planner (training/replan.py) round-trips it.
+PLAN_SCHEMA = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """The single plan currency: one pipeline execution cell.
+
+    Everything that decides *how the pipeline runs* — and nothing else —
+    lives here: ``stages`` (S, the pod-axis split), ``k`` (micro-batches
+    per batch), ``v`` (interleaved virtual stages), ``wire_dtype`` (the
+    hop codec, ``parallel/wire.py`` grammar).  Replaces the
+    tuple/kwargs sprawl that used to flow separately through
+    ``PipelineSpec``, ``train.py``, ``dryrun.py`` and ``perf_iter.py``;
+    ``PipelineSpec.from_plan`` is the only sanctioned way launchers turn
+    a plan into a runnable spec, and the online re-planner
+    (``training/replan.py``) switches between ``Plan`` values mid-run.
+
+    Frozen + normalized at construction (the codec name canonicalizes
+    through the wire grammar, so ``" INT8+topk0.50 "`` and
+    ``"int8+topk0.5"`` are the same plan and hash identically — the
+    compile cache keys on ``cell()``).  Not to be confused with the
+    wireless-side ``core.schedule.Plan`` (the paper's (l, k, b, tau)
+    allocation); this is the pod-pipeline execution plan.
+    """
+
+    stages: int
+    k: int
+    v: int = 1
+    wire_dtype: str = "none"
+
+    def __post_init__(self):
+        for name in ("stages", "k", "v"):
+            val = getattr(self, name)
+            if not isinstance(val, (int, np.integer)) or isinstance(val, bool):
+                raise ValueError(f"Plan.{name} must be an int, got {val!r}")
+            if val < 1:
+                raise ValueError(f"Plan.{name}={val} must be >= 1")
+            object.__setattr__(self, name, int(val))
+        base, frac = _parse_wire(self.wire_dtype)   # validates the grammar
+        norm = base if frac is None else f"{base}+topk{frac:g}"
+        object.__setattr__(self, "wire_dtype", norm)
+
+    def cell(self) -> tuple:
+        """Hashable compile-cache key — the full cell identity."""
+        return (self.stages, self.k, self.v, self.wire_dtype)
+
+    def to_json(self) -> dict:
+        """Stable, versioned wire schema (dryrun records, ``--plan-out``,
+        re-planner switch logs)."""
+        return {"schema": PLAN_SCHEMA, "stages": self.stages, "k": self.k,
+                "v": self.v, "wire_dtype": self.wire_dtype}
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "Plan":
+        """Inverse of ``to_json``.  Unknown schema versions fail loudly
+        (forward compatibility is a decision, not an accident); missing
+        ``schema`` reads as version 1 so hand-written JSON stays usable."""
+        if not isinstance(doc, dict):
+            raise ValueError(f"Plan.from_json expects a dict, got {doc!r}")
+        schema = doc.get("schema", 1)
+        if schema != PLAN_SCHEMA:
+            raise ValueError(
+                f"Plan schema {schema!r} not supported (this build reads "
+                f"schema {PLAN_SCHEMA}) — regenerate the plan JSON")
+        missing = [key for key in ("stages", "k") if key not in doc]
+        if missing:
+            raise ValueError(f"Plan JSON missing {missing}: {doc!r}")
+        return cls(stages=doc["stages"], k=doc["k"], v=doc.get("v", 1),
+                   wire_dtype=doc.get("wire_dtype", "none"))
+
+    def __str__(self):
+        return (f"Plan(S={self.stages}, k={self.k}, v={self.v}, "
+                f"wire={self.wire_dtype})")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -386,7 +469,7 @@ def as_wireless(inp: PlanInputs, k: int, v: int):
         act_bytes=np.array([cut_bytes, 4.0]),
         label_bytes=0.0,
     )
-    plan = Plan(l=1, k=k, b=np.array([B]), tau=np.array([1.0]), v=v)
+    plan = _sched.Plan(l=1, k=k, b=np.array([B]), tau=np.array([1.0]), v=v)
     return profile, _POD_FLEET, plan
 
 
@@ -475,11 +558,18 @@ class AutoPlan:
     def speedup(self) -> float:
         return self.baseline_s / self.wall_s if self.wall_s > 0 else 1.0
 
+    @property
+    def plan(self) -> Plan:
+        """The decision as the single plan currency (evidence stripped)."""
+        return Plan(stages=self.num_stages, k=self.k, v=self.v,
+                    wire_dtype=self.wire_dtype)
+
     def to_dict(self) -> dict:
         return {
             "num_stages": self.num_stages,
             "k": self.k,
             "v": self.v,
+            "plan": self.plan.to_json(),
             "wire_dtype": self.wire_dtype,
             "wall_s": self.wall_s,
             "baseline_s": self.baseline_s,

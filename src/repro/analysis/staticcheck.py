@@ -732,21 +732,35 @@ def audit_hlo_text(text: str, *, pod_size: int, num_stages: int,
 
 
 # ---------------------------------------------------------------------------
-# Fixture cells: both lowerings x wire grammars x v (the audit matrix).
+# Fixture cells: both lowerings x the re-planner's reachable cell set.
 # ---------------------------------------------------------------------------
-
-AUDIT_WIRES = ("none", "int8", "fp8", "int8+topk0.25")
-AUDIT_VS = (1, 2)
 
 # the fixture cell (mirrors the tier-1 tiny config; float32 so the
 # CPU-backend float-normalization upcast cannot blur byte accounting)
 _CELL = dict(num_stages=2, microbatches=3, batch=6, seq=16,
+             num_layers=4,
              mesh_shape=(2, 2, 2), axis_names=("pod", "data", "model"))
+
+# The audit grid is no longer hand-picked: it is the ONLINE RE-PLANNER's
+# reachable (wire, v) cell set for the fixture cell — every lowering a
+# ``training.replan.Replanner`` over the default ``WIRE_AUTO``
+# candidates can switch into mid-run must stay green here, or a plan
+# switch could land on a cell the auditor never saw.  (k moves shapes,
+# not the lowering grammar, so cells collapse over k; the fixture's
+# ragged k=3 over batch=6 exercises padding.)
+from repro.training.replan import reachable_cells as _reachable_cells
+
+AUDIT_CELLS = tuple(_reachable_cells(num_stages=_CELL["num_stages"],
+                                     num_layers=_CELL["num_layers"],
+                                     v_cap=4))
+AUDIT_WIRES = tuple(dict.fromkeys(w for w, _v in AUDIT_CELLS))
+AUDIT_VS = tuple(sorted(dict.fromkeys(v for _w, v in AUDIT_CELLS)))
 
 
 def _cell_model():
     from repro.models import LM, LMConfig
-    cfg = LMConfig(name="audit", num_layers=4, d_model=64, n_heads=4,
+    cfg = LMConfig(name="audit", num_layers=_CELL["num_layers"],
+                   d_model=64, n_heads=4,
                    n_kv=2, d_ff=128, vocab=256, dtype="float32")
     return LM(cfg)
 
@@ -790,9 +804,15 @@ def _cell_fns(wire: str, v: int, mesh):
     return jax.value_and_grad(fn), (params,), meta
 
 
-def audit_cells(level: str = "jaxpr", wires=AUDIT_WIRES, vs=AUDIT_VS,
-                bytes_rtol: float = 0.01):
-    """Run the auditor over the fixture matrix.  ``level``:
+def audit_cells(level: str = "jaxpr", wires=None, vs=None,
+                bytes_rtol: float = 0.01, cells=None):
+    """Run the auditor over the re-planner's reachable cell set.
+
+    By default the grid is ``AUDIT_CELLS`` — the (wire, v) set a
+    ``training.replan.Replanner`` can switch into on the fixture cell.
+    ``wires``/``vs`` restrict to a sub-product (their cross product);
+    ``cells`` pins an explicit ``[(wire, v), ...]`` list and wins over
+    both.  ``level``:
 
       * ``'jaxpr'`` — abstract-mesh tracing, zero devices needed (works
         on both JAX generations; audits whichever shard_map lowering
@@ -809,59 +829,63 @@ def audit_cells(level: str = "jaxpr", wires=AUDIT_WIRES, vs=AUDIT_VS,
 
     from repro.parallel import compat
 
+    if cells is None:
+        cells = [(w, v) for w in (AUDIT_WIRES if wires is None else wires)
+                 for v in (AUDIT_VS if vs is None else vs)]
+    else:
+        cells = list(cells)
     violations = []
-    cells = []
+    out_cells = []
     lowering = "partial-manual" if compat.CAPS.partial_manual \
         else "full-manual"
-    for wire in wires:
-        for v in vs:
-            key = f"{wire}/v{v}"
-            if level == "jaxpr":
-                mesh = compat.abstract_mesh(_CELL["mesh_shape"],
-                                            _CELL["axis_names"])
-                grad_fn, args, meta = _cell_fns(wire, v, mesh)
-                jaxpr = jax.make_jaxpr(grad_fn)(*args)
-                vio, stats = audit_jaxpr(
-                    jaxpr, num_stages=meta["num_stages"],
-                    virtual_stages=v, wire_dtype=meta["wire"],
-                    d_model=meta["d_model"], act_dtype=meta["act_dtype"])
-            elif level == "hlo":
-                ndev = 1
-                for n in _CELL["mesh_shape"]:
-                    ndev *= n
-                if len(jax.devices()) < ndev:
-                    raise RuntimeError(
-                        f"HLO-level audit needs {ndev} devices (set "
-                        "XLA_FLAGS=--xla_force_host_platform_device_count="
-                        f"{ndev} before importing jax; the CLI does this)")
-                mesh = compat.make_mesh(_CELL["mesh_shape"],
+    for wire, v in cells:
+        key = f"{wire}/v{v}"
+        if level == "jaxpr":
+            mesh = compat.abstract_mesh(_CELL["mesh_shape"],
                                         _CELL["axis_names"])
-                grad_fn, args, meta = _cell_fns(wire, v, mesh)
-                text = jax.jit(grad_fn).lower(*args).compile().as_text()
-                vio, stats = audit_hlo_text(
-                    text, pod_size=meta["pod_size"],
-                    num_stages=meta["num_stages"], virtual_stages=v,
-                    wire_dtype=meta["wire"], d_model=meta["d_model"],
-                    act_dtype=meta["act_dtype"],
-                    hop_elems=meta["hop_elems"], bytes_rtol=bytes_rtol)
-            else:
-                raise ValueError(f"unknown audit level {level!r}")
-            vio = [dataclasses.replace(x, where=f"{key}:{x.where}")
-                   for x in vio]
-            violations += vio
-            cells.append({"cell": key, "level": level,
+            grad_fn, args, meta = _cell_fns(wire, v, mesh)
+            jaxpr = jax.make_jaxpr(grad_fn)(*args)
+            vio, stats = audit_jaxpr(
+                jaxpr, num_stages=meta["num_stages"],
+                virtual_stages=v, wire_dtype=meta["wire"],
+                d_model=meta["d_model"], act_dtype=meta["act_dtype"])
+        elif level == "hlo":
+            ndev = 1
+            for n in _CELL["mesh_shape"]:
+                ndev *= n
+            if len(jax.devices()) < ndev:
+                raise RuntimeError(
+                    f"HLO-level audit needs {ndev} devices (set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count="
+                    f"{ndev} before importing jax; the CLI does this)")
+            mesh = compat.make_mesh(_CELL["mesh_shape"],
+                                    _CELL["axis_names"])
+            grad_fn, args, meta = _cell_fns(wire, v, mesh)
+            text = jax.jit(grad_fn).lower(*args).compile().as_text()
+            vio, stats = audit_hlo_text(
+                text, pod_size=meta["pod_size"],
+                num_stages=meta["num_stages"], virtual_stages=v,
+                wire_dtype=meta["wire"], d_model=meta["d_model"],
+                act_dtype=meta["act_dtype"],
+                hop_elems=meta["hop_elems"], bytes_rtol=bytes_rtol)
+        else:
+            raise ValueError(f"unknown audit level {level!r}")
+        vio = [dataclasses.replace(x, where=f"{key}:{x.where}")
+               for x in vio]
+        violations += vio
+        out_cells.append({"cell": key, "level": level,
                           "lowering": lowering,
                           "violations": len(vio), "stats": stats})
     # the custom_vjp residual contract is cell-independent — audit once
     # per coded grammar
-    for wire in wires:
+    for wire in dict.fromkeys(w for w, _v in cells):
         if autotune._parse_wire(wire)[0] != "none":
             vio = audit_wire_custom_vjp(wire)
             violations += vio
-            cells.append({"cell": f"vjp:{wire}", "level": "jaxpr",
-                          "lowering": lowering,
-                          "violations": len(vio), "stats": {}})
-    return violations, cells
+            out_cells.append({"cell": f"vjp:{wire}", "level": "jaxpr",
+                              "lowering": lowering,
+                              "violations": len(vio), "stats": {}})
+    return violations, out_cells
 
 
 # ---------------------------------------------------------------------------

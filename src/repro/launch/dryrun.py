@@ -104,13 +104,13 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
             batch_sh = policy.batch_shardings(batch)
             pipeline = None
             if pipeline_k:
+                from repro.analysis.autotune import Plan
                 from repro.parallel.pipeline import (PipelineSpec,
                                                      wire_ef_zeros)
                 assert multi_pod, "the C2P2SL pipeline runs over the pod axis"
-                pipeline = PipelineSpec(num_stages=mesh.shape["pod"],
-                                        microbatches=pipeline_k,
-                                        virtual_stages=pipeline_v,
-                                        wire_dtype=wire_dtype or "none")
+                pipeline = PipelineSpec.from_plan(
+                    Plan(stages=mesh.shape["pod"], k=pipeline_k,
+                         v=pipeline_v, wire_dtype=wire_dtype or "none"))
                 ef = jax.eval_shape(
                     lambda: wire_ef_zeros(cfg, pipeline, shape.global_batch,
                                           shape.seq_len))
@@ -177,6 +177,9 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
         "pipeline_k": pipeline_k,
         "pipeline_v": pipeline_v,
         "wire_dtype": wire_dtype or "none",
+        # the compiled cell as the versioned single plan currency
+        # (autotune.Plan.to_json; null for unpipelined cells)
+        "plan": pipeline.plan.to_json() if pipeline is not None else None,
         "microbatches": microbatches,
         "compile_s": round(time.time() - t0, 1),
         "state_bytes_per_device": state_bytes,
@@ -230,23 +233,10 @@ def main():
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="both",
                     choices=["single", "multi", "both"])
-    ap.add_argument("--pipeline-k", type=int, default=0,
-                    help="enable the C2P2SL pod pipeline with k microbatches "
-                         "(multi-pod train only)")
-    ap.add_argument("--pipeline-v", type=int, default=1,
-                    help="interleaved virtual stages per pipeline stage")
-    ap.add_argument("--wire-dtype", default="none",
-                    help="wire codec on the pipeline's cut-activation "
-                         "hop (parallel/wire.py): none|int8|fp8, "
-                         "optionally '+topk<frac>' for the sparsified "
-                         "gradient hop (e.g. int8+topk0.25); records "
-                         "carry it so the planner can un-scale the "
-                         "ppermute bytes")
+    from repro.launch.plan_args import add_plan_args
+    add_plan_args(ap, flavor="lower")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--out", default="results/dryrun.jsonl")
-    ap.add_argument("--plan-out", default=None,
-                    help="also write the cells' roofline auto-plans "
-                         "(repro.analysis.autotune) to this JSON file")
     ap.add_argument("--skip-done", action="store_true",
                     help="skip cells already present in --out")
     args = ap.parse_args()
@@ -287,7 +277,7 @@ def main():
             for multi in meshes:
                 mesh_name = "2x16x16" if multi else "16x16"
                 key = cell_key(arch_name, shape_name, mesh_name,
-                               args.pipeline_k, args.pipeline_v,
+                               args.pipeline_k, args.virtual_stages,
                                args.wire_dtype)
                 if key in done:
                     print(f"done  {key}")
@@ -298,7 +288,7 @@ def main():
                     rec, compiled = lower_cell(
                         arch_name, shape_name, multi,
                         pipeline_k=args.pipeline_k,
-                        pipeline_v=args.pipeline_v,
+                        pipeline_v=args.virtual_stages,
                         wire_dtype=args.wire_dtype,
                         microbatches=args.microbatches)
                     mem = rec["memory"]

@@ -1,0 +1,110 @@
+"""Shared CLI surface for the pipeline plan.
+
+One argparse group used by every launcher that constructs a pipeline —
+``repro.launch.train``, ``repro.launch.dryrun``,
+``benchmarks/perf_iter.py`` — so the plan flags cannot drift apart
+again (they had: three hand-rolled copies with different types,
+defaults and help text, and ``train.py`` spelled the interleave flag
+``--virtual-stages`` while the other two said ``--pipeline-v``).
+
+Two flavors:
+
+* ``add_plan_args(ap, flavor="train")`` — the training driver: values
+  may be ``'auto'`` (the roofline planner picks), the codec accepts
+  ``auto``, and the planner-evidence flags (``--plan-roofline``,
+  ``--plan-hints``, ``--plan-out``) plus the online re-planner flag
+  (``--replan``) are included.
+* ``add_plan_args(ap, flavor="lower")`` — the lower/compile drivers
+  (dryrun, perf_iter): plain integers (0 = no pipeline), no ``auto``
+  (a lowered record must pin its cell).
+
+``--virtual-stages`` is the canonical interleave spelling everywhere;
+``--pipeline-v`` keeps working as a deprecated alias (both bind to
+``args.virtual_stages``).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+_WIRE_HELP = ("wire codec for the pipeline's cut-activation hop "
+              "(parallel/wire.py): int8/fp8 block-quantize the ppermute "
+              "payload both directions; '<base>+topk<frac>' (e.g. "
+              "int8+topk0.25) additionally sparsifies the gradient hop "
+              "with error feedback")
+
+
+def add_plan_args(ap: argparse.ArgumentParser, *, flavor: str = "train",
+                  plan_out: bool = True) -> argparse._ArgumentGroup:
+    """Attach the shared pipeline-plan flag group; returns the group."""
+    if flavor not in ("train", "lower"):
+        raise ValueError(f"flavor must be 'train' or 'lower', got {flavor!r}")
+    g = ap.add_argument_group(
+        "pipeline plan",
+        "the (stages, k, v, wire) plan cell — one Plan currency "
+        "(repro.analysis.autotune.Plan) across train/dryrun/perf_iter")
+    if flavor == "train":
+        g.add_argument("--pipeline-stages", type=int, default=0,
+                       help="S>1: run the block stack as a C2P2SL pipeline "
+                            "over a pod axis of S local devices")
+        g.add_argument("--pipeline-k", default=None,
+                       help="micro-batches per pipelined batch: an integer, "
+                            "or 'auto' to let the roofline planner pick "
+                            "(unset also auto-plans — no more silent k=4)")
+        g.add_argument("--virtual-stages", "--pipeline-v",
+                       dest="virtual_stages", default=None,
+                       help="v>1: interleaved virtual stages — each "
+                            "pipeline stage holds v round-robin model "
+                            "chunks, shrinking the bubble to (S-1)/v ticks "
+                            "per direction at the same k; 'auto' lets the "
+                            "planner trade the extra ppermute volume "
+                            "against the bubble shrink (unset: 1). "
+                            "(--pipeline-v is a deprecated alias)")
+        g.add_argument("--wire-dtype", default="none",
+                       help=_WIRE_HELP + "; 'auto' lets the roofline "
+                            "planner enumerate the codec jointly with "
+                            "(k, v)")
+        g.add_argument("--plan-roofline", default=None,
+                       help="dry-run record (JSON/JSONL) driving the "
+                            "auto-planner; default: compile-free config "
+                            "estimate (repro.analysis.autotune)")
+        g.add_argument("--plan-hints", default=None,
+                       help="measured planner hints JSON "
+                            "(benchmarks/ppermute_probe.py) overlaid on "
+                            "the record hints — calibrates hop_overhead_s "
+                            "and link bandwidth from a real ppermute "
+                            "instead of the HW constants")
+        g.add_argument("--replan", default=None, metavar="SPEC",
+                       help="online re-planning (training/replan.py): "
+                            "'every:N,hysteresis:F' re-evaluates the plan "
+                            "every N steps and switches when the modeled "
+                            "wall-time gain beats F (also accepts "
+                            "cooldown:N, ewma:F, bare 'on'); 'off' or "
+                            "unset disables")
+    else:
+        g.add_argument("--pipeline-k", type=int, default=0,
+                       help="enable the C2P2SL pod pipeline with k "
+                            "micro-batches (multi-pod train only; 0 = no "
+                            "pipeline)")
+        g.add_argument("--virtual-stages", "--pipeline-v",
+                       dest="virtual_stages", type=int, default=1,
+                       help="interleaved virtual stages per pipeline "
+                            "stage (--pipeline-v is a deprecated alias)")
+        g.add_argument("--wire-dtype", default="none",
+                       help=_WIRE_HELP + "; records carry it so the "
+                            "planner can un-scale the ppermute bytes")
+    if plan_out:
+        g.add_argument("--plan-out", default=None,
+                       help="write the resolved plan (train: the plan + "
+                            "its evidence; dryrun: the cells' roofline "
+                            "auto-plans) as JSON")
+    return g
+
+
+def replan_config(args):
+    """``args.replan`` -> ``ReplanConfig | None`` (None = disabled)."""
+    from repro.training.replan import ReplanConfig
+    try:
+        return ReplanConfig.parse(getattr(args, "replan", None))
+    except ValueError as e:
+        raise SystemExit(f"--replan: {e}")

@@ -83,6 +83,38 @@ def _load_plan_hints(plan_hints):
     return hints
 
 
+def plan_inputs_for(*, cfg, batch: int, seq: int, pipeline_stages: int,
+                    plan_roofline: str | None = None,
+                    plan_hints: str | None = None):
+    """Base ``PlanInputs`` for this run: the dry-run record's measured
+    costs when ``--plan-roofline`` names one, else the compile-free
+    config estimate; ``--plan-hints`` overlays either.  Returns
+    ``(inputs, source_label)`` — also the calibration anchor the online
+    re-planner (``--replan``) drifts from."""
+    import dataclasses as _dc
+
+    from repro.analysis import autotune
+    extra_hints = _load_plan_hints(plan_hints)
+    if plan_roofline:
+        try:
+            record = autotune.load_record(plan_roofline)
+            inp = autotune.plan_inputs_from_record(
+                record, num_stages=pipeline_stages,
+                num_layers=cfg.num_layers, extra_hints=extra_hints)
+        except (OSError, ValueError) as e:   # unreadable / unpipelined record
+            raise SystemExit(f"--plan-roofline {plan_roofline}: {e}")
+        inp_src = plan_roofline
+    else:
+        hints = extra_hints or {}
+        inp = autotune.plan_inputs_from_cfg(
+            cfg, batch=batch, seq=seq, num_stages=pipeline_stages,
+            hop_overhead_s=hints.get("hop_overhead_s"),
+            link_bw_Bps=hints.get("link_bw_Bps"))
+        inp_src = "config estimate (no --plan-roofline)"
+    # a micro-batch needs at least one sample row
+    return _dc.replace(inp, k_cap=max(1, min(inp.k_cap, batch))), inp_src
+
+
 def resolve_pipeline_plan(*, pipeline_stages: int, pipeline_k,
                           virtual_stages, cfg, batch: int, seq: int,
                           plan_roofline: str | None = None,
@@ -94,10 +126,13 @@ def resolve_pipeline_plan(*, pipeline_stages: int, pipeline_k,
     value came from — ``flag`` (hand-supplied), ``auto`` (the roofline
     planner, asked for explicitly), ``auto:default`` (k was unset: the
     planner picks it, replacing the old silent k=4 default), or
-    ``default`` (v unset stays 1; wire unset stays 'none').  When the
-    planner runs, ``info`` carries its full ``AutoPlan`` evidence under
-    ``"plan"``.  ``plan_hints`` overlays measured planner hints (the
-    ppermute-probe calibration) on the record's own.
+    ``default`` (v unset stays 1; wire unset stays 'none').  The
+    resolved cell rides ``info["plan_cell"]`` as the versioned
+    ``autotune.Plan`` JSON (the single plan currency; ``spec.plan``
+    round-trips it); when the planner runs, ``info`` additionally
+    carries the full ``AutoPlan`` evidence under ``"plan"``.
+    ``plan_hints`` overlays measured planner hints (the ppermute-probe
+    calibration) on the record's own.
     """
     k_arg = _parse_auto_int(pipeline_k, "--pipeline-k")
     v_arg = _parse_auto_int(virtual_stages, "--virtual-stages")
@@ -133,39 +168,25 @@ def resolve_pipeline_plan(*, pipeline_stages: int, pipeline_k,
     wire_src = "auto" if wire == "auto" \
         else ("flag" if wire != "none" else "default")
 
+    from repro.analysis.autotune import Plan
     from repro.parallel.pipeline import PipelineSpec
     if isinstance(k_arg, int) and (isinstance(v_arg, int) or v_arg is None) \
             and wire != "auto":
-        spec = PipelineSpec(num_stages=pipeline_stages, microbatches=k_arg,
-                            virtual_stages=v_arg if v_arg else 1,
-                            wire_dtype=wire)
+        try:
+            cell = Plan(stages=pipeline_stages, k=k_arg,
+                        v=v_arg if v_arg else 1, wire_dtype=wire)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        spec = PipelineSpec.from_plan(cell)
         return spec, {"enabled": True, "k": spec.microbatches,
                       "v": spec.virtual_stages, "wire": spec.wire_dtype,
                       "k_source": k_src, "v_source": v_src,
-                      "wire_source": wire_src, "plan": None}
+                      "wire_source": wire_src,
+                      "plan_cell": cell.to_json(), "plan": None}
 
-    import dataclasses as _dc
-
-    from repro.analysis import autotune
-    extra_hints = _load_plan_hints(plan_hints)
-    if plan_roofline:
-        try:
-            record = autotune.load_record(plan_roofline)
-            inp = autotune.plan_inputs_from_record(
-                record, num_stages=pipeline_stages,
-                num_layers=cfg.num_layers, extra_hints=extra_hints)
-        except (OSError, ValueError) as e:   # unreadable / unpipelined record
-            raise SystemExit(f"--plan-roofline {plan_roofline}: {e}")
-        inp_src = plan_roofline
-    else:
-        hints = extra_hints or {}
-        inp = autotune.plan_inputs_from_cfg(
-            cfg, batch=batch, seq=seq, num_stages=pipeline_stages,
-            hop_overhead_s=hints.get("hop_overhead_s"),
-            link_bw_Bps=hints.get("link_bw_Bps"))
-        inp_src = "config estimate (no --plan-roofline)"
-    # a micro-batch needs at least one sample row
-    inp = _dc.replace(inp, k_cap=max(1, min(inp.k_cap, batch)))
+    inp, inp_src = plan_inputs_for(
+        cfg=cfg, batch=batch, seq=seq, pipeline_stages=pipeline_stages,
+        plan_roofline=plan_roofline, plan_hints=plan_hints)
     try:
         spec, plan = PipelineSpec.auto_plan(
             inp,
@@ -179,6 +200,7 @@ def resolve_pipeline_plan(*, pipeline_stages: int, pipeline_k,
                   "v": spec.virtual_stages, "wire": spec.wire_dtype,
                   "k_source": k_src, "v_source": v_src,
                   "wire_source": wire_src, "roofline": inp_src,
+                  "plan_cell": spec.plan.to_json(),
                   "plan": plan.to_dict()}
 
 
@@ -192,40 +214,15 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1,
                     help="the paper's k (gradient accumulation)")
-    ap.add_argument("--pipeline-stages", type=int, default=0,
-                    help="S>1: run the block stack as a C2P2SL pipeline "
-                         "over a pod axis of S local devices")
-    ap.add_argument("--pipeline-k", default=None,
-                    help="micro-batches per pipelined batch: an integer, "
-                         "or 'auto' to let the roofline planner pick "
-                         "(unset also auto-plans — no more silent k=4)")
-    ap.add_argument("--virtual-stages", default=None,
-                    help="v>1: interleaved virtual stages — each pipeline "
-                         "stage holds v round-robin model chunks, "
-                         "shrinking the bubble to (S-1)/v ticks per "
-                         "direction at the same k; 'auto' lets the "
-                         "planner trade the extra ppermute volume "
-                         "against the bubble shrink (unset: 1)")
-    ap.add_argument("--wire-dtype", default="none",
-                    help="wire codec for the pipeline's cut-activation "
-                         "hop (parallel/wire.py): int8/fp8 block-"
-                         "quantize the ppermute payload both directions; "
-                         "'<base>+topk<frac>' (e.g. int8+topk0.25) "
-                         "additionally sparsifies the gradient hop with "
-                         "error feedback; 'auto' lets the roofline "
-                         "planner enumerate the codec jointly with (k, v)")
-    ap.add_argument("--plan-roofline", default=None,
-                    help="dry-run record (JSON/JSONL) driving the "
-                         "auto-planner; default: compile-free config "
-                         "estimate (repro.analysis.autotune)")
-    ap.add_argument("--plan-hints", default=None,
-                    help="measured planner hints JSON "
-                         "(benchmarks/ppermute_probe.py) overlaid on the "
-                         "record hints — calibrates hop_overhead_s and "
-                         "link bandwidth from a real ppermute instead of "
-                         "the HW constants")
-    ap.add_argument("--plan-out", default=None,
-                    help="write the resolved pipeline plan as JSON")
+    from repro.launch.plan_args import add_plan_args, replan_config
+    add_plan_args(ap, flavor="train")
+    ap.add_argument("--replan-trace", default=None,
+                    help="scripted link drift for --replan: JSON with "
+                         "{'steps': [...], 'bw_Bps': [...]} (a "
+                         "wireless.channel.BandwidthTrace) fed to the "
+                         "re-planner as per-step bandwidth observations "
+                         "— the deterministic drift driver for tests "
+                         "and the replan_drift benchmark")
     ap.add_argument("--compress-grads", action="store_true",
                     help="int8 block-quantized gradients with error "
                          "feedback before the optimizer update "
@@ -310,17 +307,74 @@ def main(argv=None):
     if args.plan_out:
         with open(args.plan_out, "w") as f:
             json.dump(plan_info, f, indent=1)
-    step_fn = jax.jit(make_lm_train_step(model, opt,
-                                         microbatches=args.microbatches,
-                                         pipeline=pipeline, mesh=mesh,
-                                         compress=args.compress_grads))
+
+    replan_cfg = replan_config(args)
+    replanner = cell_cache = trace = None
+    if replan_cfg is not None:
+        if pipeline is None:
+            raise SystemExit("--replan requires --pipeline-stages > 1 "
+                             "(the re-planner moves the pipeline plan "
+                             "cell; there is no cell without a pipeline)")
+        from repro.parallel.pipeline import PipelineSpec
+        from repro.training.replan import (PlanCellCache, Replanner,
+                                           carry_state)
+        inp, _ = plan_inputs_for(
+            cfg=cfg, batch=args.batch, seq=args.seq,
+            pipeline_stages=args.pipeline_stages,
+            plan_roofline=args.plan_roofline, plan_hints=args.plan_hints)
+        replanner = Replanner(inp, pipeline.plan, replan_cfg)
+        if args.replan_trace:
+            from repro.wireless.channel import BandwidthTrace
+            try:
+                with open(args.replan_trace) as f:
+                    doc = json.load(f)
+                trace = BandwidthTrace(steps=tuple(doc["steps"]),
+                                       bw_Bps=tuple(doc["bw_Bps"]))
+            except (OSError, KeyError, ValueError,
+                    json.JSONDecodeError) as e:
+                raise SystemExit(f"--replan-trace {args.replan_trace}: {e}")
+        # jitted train step per plan cell: re-entering a cell is a cache
+        # hit, so a switch costs one compile at most once per cell
+        cell_cache = PlanCellCache(lambda p: jax.jit(make_lm_train_step(
+            model, opt, microbatches=1,
+            pipeline=PipelineSpec.from_plan(p), mesh=mesh,
+            compress=args.compress_grads)))
+        print(f"replan: {replan_cfg.describe()}"
+              + (f" trace={args.replan_trace}" if trace else ""),
+              flush=True)
+        step_fn = cell_cache.get(pipeline.plan)
+    else:
+        step_fn = jax.jit(make_lm_train_step(model, opt,
+                                             microbatches=args.microbatches,
+                                             pipeline=pipeline, mesh=mesh,
+                                             compress=args.compress_grads))
     it = build_batch_iter(cfg, args.batch, args.seq, args.seed)
 
     history = []
     t0 = time.perf_counter()
     start = int(state["step"])
+    warm = False       # first step after a (re)compile is not a sample
     for i in range(start, args.steps):
+        ts = time.perf_counter()
         state, mets = step_fn(state, next(it))
+        if replanner is not None:
+            jax.block_until_ready(mets["loss"])
+            if warm:   # drop compile-tainted samples from the EWMA feed
+                replanner.observe_step(0, time.perf_counter() - ts)
+            warm = True
+            if trace is not None:
+                replanner.observe_bandwidth(trace.at(i + 1))
+            switch = replanner.maybe_replan(i + 1)
+            if switch is not None:
+                print(f"replan @ step {switch.step}: {switch.old} -> "
+                      f"{switch.new}  modeled "
+                      f"{switch.old_wall_s * 1e3:.1f} -> "
+                      f"{switch.new_wall_s * 1e3:.1f} ms/batch "
+                      f"({switch.gain:.0%} gain)", flush=True)
+                state = carry_state(state, switch.new, cfg=cfg,
+                                    batch=args.batch, seq=args.seq)
+                step_fn = cell_cache.get(switch.new)
+                warm = False
         if args.log_every and (i + 1) % args.log_every == 0:
             row = {k: float(v) for k, v in mets.items()}
             row.update(step=i + 1, wall_s=time.perf_counter() - t0)
@@ -331,6 +385,15 @@ def main(argv=None):
                 and (i + 1) % args.ckpt_every == 0:
             ckpt_lib.save(args.ckpt_dir, i + 1, state)
             ckpt_lib.prune(args.ckpt_dir)
+    if replanner is not None:
+        print(f"replan: {replanner.evals} evals, "
+              f"{len(replanner.switches)} switch(es), "
+              f"{cell_cache.misses} cell compile(s); "
+              f"final {replanner.current}", flush=True)
+        if args.plan_out:     # re-write with the switch log appended
+            plan_info["replan"] = replanner.to_json()
+            with open(args.plan_out, "w") as f:
+                json.dump(plan_info, f, indent=1)
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(history, f, indent=1)

@@ -95,6 +95,35 @@ class PipelineSpec:
         object.__setattr__(self, "wire_dtype", norm)
 
     @classmethod
+    def from_plan(cls, plan, *, axis: str = "pod") -> "PipelineSpec":
+        """The sanctioned ``Plan -> PipelineSpec`` constructor.
+
+        ``plan`` is the single plan currency (``analysis/autotune.Plan``)
+        or its ``to_json()`` dict; every launcher builds its pipeline
+        through here so a plan that changes mid-run (training/replan.py)
+        and a plan fixed at launch construct identically.
+        """
+        from repro.analysis.autotune import Plan
+        if isinstance(plan, dict):
+            plan = Plan.from_json(plan)
+        if not isinstance(plan, Plan):
+            raise TypeError(
+                f"from_plan expects an autotune.Plan (or its to_json() "
+                f"dict), got {type(plan).__name__} — build one with "
+                "Plan(stages=..., k=..., v=..., wire_dtype=...)")
+        return cls(num_stages=plan.stages, microbatches=plan.k,
+                   virtual_stages=plan.v, wire_dtype=plan.wire_dtype,
+                   axis=axis)
+
+    @property
+    def plan(self):
+        """This spec as the single plan currency (inverse of
+        ``from_plan``; the pod axis name is runtime context, not plan)."""
+        from repro.analysis.autotune import Plan
+        return Plan(stages=self.num_stages, k=self.microbatches,
+                    v=self.virtual_stages, wire_dtype=self.wire_dtype)
+
+    @classmethod
     def auto_k(cls, stage_compute_s: float, link_s: float, *,
                num_stages: int = 2, virtual_stages: int = 1,
                k_cap: int = 16, axis: str = "pod"):
@@ -148,10 +177,7 @@ class PipelineSpec:
             plan = autotune.choose_plan(inp, k_fixed=k_fixed,
                                         v_fixed=v_fixed,
                                         wire_candidates=wire_candidates)
-        spec = cls(num_stages=plan.num_stages, microbatches=plan.k,
-                   virtual_stages=plan.v,
-                   wire_dtype=getattr(plan, "wire_dtype", "none"), axis=axis)
-        return spec, plan
+        return cls.from_plan(plan.plan, axis=axis), plan
 
 
 def _split_stages(blocks, num_stages: int, virtual_stages: int = 1):

@@ -1,5 +1,38 @@
-from repro.training.optim import Optimizer, adamw, sgd, cosine_schedule
-from repro.training.loop import (TrainState, init_state, make_train_step, fit,
-                                 resume_or_init)
-from repro.training.microbatch import microbatched_value_and_grad, split_batch
-from repro.training import checkpoint, compress, fault
+"""Training package.
+
+Lazy exports (PEP 562): the optimizer/loop modules import jax at module
+scope, but some consumers — ``analysis/staticcheck`` deriving its audit
+grid from ``training.replan.reachable_cells``, the jax-free planner
+paths — must be importable before any accelerator stack exists (and
+before ``XLA_FLAGS`` is pinned).  Importing a submodule or a re-exported
+name resolves on first attribute access instead of at package import.
+"""
+
+_LAZY = {
+    "Optimizer": "repro.training.optim",
+    "adamw": "repro.training.optim",
+    "sgd": "repro.training.optim",
+    "cosine_schedule": "repro.training.optim",
+    "TrainState": "repro.training.loop",
+    "init_state": "repro.training.loop",
+    "make_train_step": "repro.training.loop",
+    "fit": "repro.training.loop",
+    "resume_or_init": "repro.training.loop",
+    "microbatched_value_and_grad": "repro.training.microbatch",
+    "split_batch": "repro.training.microbatch",
+}
+_SUBMODULES = ("checkpoint", "compress", "fault", "loop", "microbatch",
+               "optim", "replan")
+
+
+def __getattr__(name):
+    import importlib
+    if name in _LAZY:
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.training.{name}")
+    raise AttributeError(f"module 'repro.training' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY) | set(_SUBMODULES))

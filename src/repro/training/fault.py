@@ -32,6 +32,44 @@ class WorkerState:
     step_time_ewma: float = 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class WatchdogTelemetry:
+    """Typed snapshot of the watchdog's per-worker step-time EWMAs.
+
+    The supported way for other subsystems (the online re-planner,
+    re-balancing, dashboards) to read the watchdog — callers used to poke
+    ``WorkerState.step_time_ewma`` directly, which coupled them to the
+    internal dict layout.  ``step_time_ewma`` is ordered by worker id;
+    workers that have not reported yet read 0.0.
+    """
+
+    step_time_ewma: tuple        # seconds, one entry per worker
+    workers: tuple               # the matching worker ids
+
+    @property
+    def median_s(self) -> float:
+        """Median over workers that have reported (0.0 if none have)."""
+        t = np.array(self.step_time_ewma)
+        t = t[t > 0]
+        return float(np.median(t)) if t.size else 0.0
+
+    @property
+    def max_s(self) -> float:
+        return float(max(self.step_time_ewma, default=0.0))
+
+    def extra_hints(self, baseline_step_s: float | None = None) -> dict:
+        """Planner-hint overlay for the online re-planner
+        (``training/replan.py``): the measured step time, plus — when the
+        caller knows what step time the current plan was *modeled* at —
+        the ``stage_time_scale`` drift factor the re-planner multiplies
+        into ``PlanInputs.stage_fwd_s/stage_bwd_s``."""
+        med = self.median_s
+        hints = {"step_time_ewma_s": med} if med > 0 else {}
+        if baseline_step_s and baseline_step_s > 0 and med > 0:
+            hints["stage_time_scale"] = med / baseline_step_s
+        return hints
+
+
 class Watchdog:
     """Coordinator-side liveness + straggler tracking."""
 
@@ -63,6 +101,15 @@ class Watchdog:
         med = np.median(times[times > 0])
         return [i for i, st in self.workers.items()
                 if st.step_time_ewma > factor * med]
+
+    def telemetry(self) -> WatchdogTelemetry:
+        """Typed per-worker EWMA snapshot (see ``WatchdogTelemetry``) —
+        use this instead of reading ``workers[i].step_time_ewma``."""
+        ids = tuple(sorted(self.workers))
+        return WatchdogTelemetry(
+            step_time_ewma=tuple(self.workers[i].step_time_ewma
+                                 for i in ids),
+            workers=ids)
 
     def throughputs(self) -> np.ndarray:
         """Relative worker speeds (1/step-time), for re-balancing."""

@@ -1,0 +1,509 @@
+"""Adaptive online re-planning: channel-tracking plan switches.
+
+The roofline planner (``analysis/autotune``) freezes ``(stages, k, v,
+wire_dtype)`` once from a dry-run record, but the premise of C2P2SL over
+wireless links is that the channel is NOT constant: AC²P²SL shows the
+plan must track link quality, and a codec choice (EPSL-style) only pays
+off while the link it was chosen for persists.  This module closes the
+loop at runtime:
+
+    measured step times (Watchdog EWMAs) ─┐
+    measured hop times  (LinkEstimator) ──┼─> apply_hints ─> PlanInputs
+    scripted/physical channel traces ─────┘        │
+                                             choose_plan every N steps
+                                                   │
+                            hysteresis gate: switch only when the
+                            projected wall-time gain clears the margin
+
+Plan switches are cheap at scale: ``PlanCellCache`` memoizes the jitted
+train step (plus ``eval_shape``'d state templates) per plan **cell**
+``(stages, k, v, wire_dtype)`` so revisiting a plan never recompiles,
+and ``carry_state`` moves training state across a switch without a
+checkpoint round-trip.
+
+EF-buffer carry-over rules (``carry_state``)
+--------------------------------------------
+The top-k wire codec threads an error-feedback residual ``wire_ef`` of
+shape ``[S, ticks, mb, seq_total, d_model]`` through the loss; ticks
+depends on (k, v) and mb on (batch, k), so the buffer's shape is a
+function of the plan cell.  Across a switch:
+
+* **same shape** (e.g. only the top-k fraction changed, or the codec
+  base flipped int8<->fp8 at equal k/v): the residual is carried over
+  EXACTLY — it is un-flushed gradient mass and remains valid error
+  feedback under the new codec.
+* **shape change** (k or v changed, incl. ragged-k transitions where
+  ``mb = ceil(batch/k)`` moves): the residual is RESET to zeros.  This
+  drops at most one micro-batch's worth of compressed-away gradient —
+  the same semantics as resuming a pre-top-k checkpoint — and the new
+  buffer is rebuilt with ``wire_ef_zeros`` so padding stays exact.
+* **topk -> dense**: the buffer is dropped (dense hops carry no EF).
+* **dense -> topk**: a fresh zero buffer is created.
+
+Nothing else in the state depends on the plan cell: params, optimizer
+state and the step counter transfer unchanged (re-sharding, when a mesh
+is in play, is a ``device_put`` against the target shardings — jit
+would re-shard lazily anyway; doing it eagerly keeps the first
+post-switch step honest in profiles).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.analysis.autotune import (Plan, PlanInputs, WIRE_AUTO,
+                                     choose_plan, plan_wall_time)
+from repro.training.fault import Watchdog
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanConfig:
+    """Knobs of the online re-planner (CLI grammar: ``--replan
+    every:N,hysteresis:F`` or ``--replan off``)."""
+
+    every: int = 50          # re-evaluate the plan every N steps
+    hysteresis: float = 0.1  # switch only if new wall < (1-h) * current
+    cooldown: int = 0        # extra steps to hold after a switch
+    #                          (0 = the `every` cadence is the cooldown)
+    ewma: float = 0.7        # smoothing for link-bandwidth observations
+
+    def __post_init__(self):
+        if self.every < 1:
+            raise ValueError(f"replan every={self.every} must be >= 1")
+        if not 0.0 <= self.hysteresis < 1.0:
+            raise ValueError(
+                f"replan hysteresis={self.hysteresis} must be in [0, 1)")
+        if self.cooldown < 0:
+            raise ValueError(f"replan cooldown={self.cooldown} must be >= 0")
+        if not 0.0 <= self.ewma < 1.0:
+            raise ValueError(f"replan ewma={self.ewma} must be in [0, 1)")
+
+    @classmethod
+    def parse(cls, text: str | None) -> "ReplanConfig | None":
+        """Parse the ``--replan`` flag value.
+
+        ``None``/``"off"`` -> None (re-planning disabled).  Otherwise a
+        comma-separated ``key:value`` list over {every, hysteresis,
+        cooldown, ewma}; bare ``on`` gives the defaults.
+        """
+        if text is None:
+            return None
+        text = text.strip().lower()
+        if text in ("off", "none", "0", "false"):
+            return None
+        if text in ("on", "", "default"):
+            return cls()
+        kwargs = {}
+        for item in text.split(","):
+            if ":" not in item:
+                raise ValueError(
+                    f"--replan items must be key:value, got {item!r} "
+                    f"(full value {text!r})")
+            key, _, val = item.partition(":")
+            key = key.strip()
+            if key in ("every", "cooldown"):
+                kwargs[key] = int(val)
+            elif key in ("hysteresis", "ewma"):
+                kwargs[key] = float(val)
+            else:
+                raise ValueError(
+                    f"unknown --replan key {key!r}; expected one of "
+                    "every, hysteresis, cooldown, ewma (or 'off')")
+        return cls(**kwargs)
+
+    def describe(self) -> str:
+        return (f"every:{self.every},hysteresis:{self.hysteresis:g}"
+                + (f",cooldown:{self.cooldown}" if self.cooldown else ""))
+
+
+# ---------------------------------------------------------------------------
+# Link estimation (in-loop ppermute-probe)
+# ---------------------------------------------------------------------------
+
+
+class LinkEstimator:
+    """Online estimate of the stage-boundary link from in-loop samples.
+
+    Two feeds, either of which alone is enough:
+
+    * ``observe(nbytes, seconds)`` — a timed hop (the in-loop analogue
+      of ``benchmarks/ppermute_probe.py``).  With samples at >= 2
+      distinct sizes a least-squares fit ``t = overhead + bytes/bw``
+      separates per-message overhead from bandwidth, exactly like the
+      probe's affine fit; single-size samples yield bandwidth only.
+    * ``observe_bandwidth(bw_Bps)`` — a direct reading (a channel
+      telemetry API, or a scripted ``wireless.channel.BandwidthTrace``
+      in tests/benchmarks), EWMA-smoothed.
+
+    ``hints()`` exports the current estimate as the planner-hint overlay
+    ``apply_hints`` consumes.
+    """
+
+    def __init__(self, ewma: float = 0.7, window: int = 64):
+        self.ewma = ewma
+        self.window = window
+        self._samples: list = []       # (bytes, seconds) probe samples
+        self._bw_Bps: float | None = None
+        self._overhead_s: float | None = None
+
+    def observe(self, nbytes: float, seconds: float) -> None:
+        if nbytes <= 0 or seconds <= 0:
+            return
+        self._samples.append((float(nbytes), float(seconds)))
+        del self._samples[:-self.window]
+        self._refit()
+
+    def observe_bandwidth(self, bw_Bps: float,
+                          overhead_s: float | None = None) -> None:
+        if bw_Bps <= 0:
+            return
+        self._bw_Bps = (bw_Bps if self._bw_Bps is None
+                        else self.ewma * self._bw_Bps
+                        + (1 - self.ewma) * bw_Bps)
+        if overhead_s is not None:
+            self._overhead_s = (overhead_s if self._overhead_s is None
+                                else self.ewma * self._overhead_s
+                                + (1 - self.ewma) * overhead_s)
+
+    def _refit(self) -> None:
+        b = np.array([s[0] for s in self._samples])
+        t = np.array([s[1] for s in self._samples])
+        if len(set(b.tolist())) >= 2:
+            # affine fit t = a + b/bw, as in ppermute_probe
+            coeff = np.polyfit(b, t, 1)
+            slope, intercept = float(coeff[0]), float(coeff[1])
+            if slope > 0:
+                self._bw_Bps = 1.0 / slope
+                self._overhead_s = max(0.0, intercept)
+                return
+        # degenerate fit: bill everything to bandwidth
+        bw = float(b.sum() / t.sum())
+        self._bw_Bps = bw
+
+    @property
+    def bw_Bps(self) -> float | None:
+        return self._bw_Bps
+
+    @property
+    def overhead_s(self) -> float | None:
+        return self._overhead_s
+
+    def hints(self) -> dict:
+        out = {}
+        if self._bw_Bps is not None:
+            out["link_bw_Bps"] = self._bw_Bps
+        if self._overhead_s is not None:
+            out["hop_overhead_s"] = self._overhead_s
+        return out
+
+
+def apply_hints(inputs: PlanInputs, hints: dict) -> PlanInputs:
+    """Fold a measurement overlay into ``PlanInputs``.
+
+    Recognized keys (unknown keys are ignored, so watchdog telemetry and
+    planner hints can share one dict):
+
+    * ``link_bw_Bps`` — re-derives ``link_s = act_hop_bytes / bw`` (the
+      inverse of ``plan_inputs_from_dryrun``); needs ``act_hop_bytes``.
+    * ``hop_overhead_s``, ``codec_s_per_byte`` — direct replacements.
+    * ``stage_time_scale`` — multiplies ``stage_fwd_s``/``stage_bwd_s``
+      (compute drift, e.g. a thermal throttle or a straggler pod).
+    * ``stage_fwd_s``, ``stage_bwd_s`` — direct replacements (win over
+      ``stage_time_scale`` if both are present).
+    """
+    kw = {}
+    bw = hints.get("link_bw_Bps")
+    if bw and bw > 0 and inputs.act_hop_bytes > 0:
+        kw["link_s"] = float(inputs.act_hop_bytes) / float(bw)
+    for key in ("hop_overhead_s", "codec_s_per_byte"):
+        if hints.get(key) is not None:
+            kw[key] = float(hints[key])
+    scale = hints.get("stage_time_scale")
+    if scale and scale > 0:
+        kw["stage_fwd_s"] = inputs.stage_fwd_s * float(scale)
+        kw["stage_bwd_s"] = inputs.stage_bwd_s * float(scale)
+    for key in ("stage_fwd_s", "stage_bwd_s"):
+        if hints.get(key) is not None:
+            kw[key] = float(hints[key])
+    return dataclasses.replace(inputs, **kw) if kw else inputs
+
+
+# ---------------------------------------------------------------------------
+# The re-planner
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSwitch:
+    """One logged plan switch, with the evidence it was decided on."""
+
+    step: int
+    old: Plan
+    new: Plan
+    old_wall_s: float      # current plan's modeled wall on FRESH inputs
+    new_wall_s: float      # winner's modeled wall on the same inputs
+
+    @property
+    def gain(self) -> float:
+        """Fractional projected wall-time saving (0.25 = 25% faster)."""
+        return 1.0 - self.new_wall_s / self.old_wall_s \
+            if self.old_wall_s > 0 else 0.0
+
+    def to_json(self) -> dict:
+        return {"step": self.step, "old": self.old.to_json(),
+                "new": self.new.to_json(), "old_wall_s": self.old_wall_s,
+                "new_wall_s": self.new_wall_s, "gain": self.gain}
+
+
+class Replanner:
+    """Hysteresis-gated online re-planner over a fixed stage count.
+
+    Every ``config.every`` steps, re-runs ``choose_plan`` on the base
+    ``PlanInputs`` refreshed with current measurements and switches to
+    the winner only when its projected wall time beats the CURRENT
+    plan's wall time *on the same fresh inputs* by more than the
+    hysteresis margin::
+
+        new_wall < (1 - hysteresis) * current_wall
+
+    Both sides of the comparison use the refreshed inputs, so steady
+    measurement noise moves both walls together and the gate only opens
+    on a real relative regime change (no flapping; see the stationarity
+    property test).  The stage count is pinned — the pod axis is a
+    hardware fact — so switches only move (k, v, wire_dtype).
+    """
+
+    def __init__(self, inputs: PlanInputs, initial: Plan,
+                 config: ReplanConfig | None = None,
+                 watchdog: Watchdog | None = None,
+                 wire_candidates=WIRE_AUTO):
+        config = config or ReplanConfig()
+        if initial.stages != inputs.num_stages:
+            raise ValueError(
+                f"initial plan has S={initial.stages} but inputs model "
+                f"S={inputs.num_stages}; the re-planner never moves the "
+                "stage count")
+        self.base_inputs = inputs
+        self.config = config
+        self.current = initial
+        self.watchdog = watchdog
+        self.wire_candidates = tuple(wire_candidates)
+        self.link = LinkEstimator(ewma=config.ewma)
+        self.extra_hints: dict = {}
+        self.switches: list = []        # PlanSwitch log
+        self.evals = 0                  # choose_plan invocations
+        self._last_eval_step = None
+        self._last_switch_step = None
+        self._baseline_step_s = None    # watchdog calibration anchor
+
+    # -- measurement feeds ---------------------------------------------------
+
+    def observe_step(self, worker: int, step_time_s: float) -> None:
+        """Per-step wall time feed (goes to the Watchdog EWMAs)."""
+        if self.watchdog is None:
+            self.watchdog = Watchdog(n_workers=worker + 1)
+        if worker not in self.watchdog.workers:
+            from repro.training.fault import WorkerState
+            self.watchdog.workers[worker] = WorkerState(
+                last_beat=self.watchdog.clock())
+        self.watchdog.heartbeat(worker, step_time=step_time_s)
+
+    def observe_hop(self, nbytes: float, seconds: float) -> None:
+        self.link.observe(nbytes, seconds)
+
+    def observe_bandwidth(self, bw_Bps: float,
+                          overhead_s: float | None = None) -> None:
+        self.link.observe_bandwidth(bw_Bps, overhead_s)
+
+    # -- planning ------------------------------------------------------------
+
+    def refreshed_inputs(self) -> PlanInputs:
+        """Base inputs with every current measurement folded in."""
+        hints = dict(self.link.hints())
+        if self.watchdog is not None:
+            tel = self.watchdog.telemetry()
+            med = tel.median_s
+            if med > 0:
+                if self._baseline_step_s is None:
+                    # calibrate: the first healthy EWMA anchors "no
+                    # compute drift"; later medians scale stage times
+                    # relative to it.  Link drift is billed separately
+                    # by the LinkEstimator, so the anchor deliberately
+                    # does NOT chase bandwidth-induced step-time moves.
+                    self._baseline_step_s = med
+                hints.update(tel.extra_hints(self._baseline_step_s))
+        hints.pop("step_time_ewma_s", None)   # informational only
+        hints.update(self.extra_hints)
+        return apply_hints(self.base_inputs, hints)
+
+    def maybe_replan(self, step: int) -> PlanSwitch | None:
+        """Run the re-plan cadence at ``step``.
+
+        Returns the ``PlanSwitch`` if the hysteresis gate opened, else
+        None (also None on off-cadence steps).  Call once per step.
+        """
+        if self._last_eval_step is not None \
+                and step - self._last_eval_step < self.config.every:
+            return None
+        self._last_eval_step = step
+        self.evals += 1
+        inp = self.refreshed_inputs()
+        cur = self.current
+        cur_wall = plan_wall_time(inp.with_wire(cur.wire_dtype),
+                                  cur.k, cur.v)
+        best = choose_plan(inp, wire_candidates=self.wire_candidates)
+        new = best.plan
+        if new == cur:
+            return None
+        if self._last_switch_step is not None and self.config.cooldown \
+                and step - self._last_switch_step < self.config.cooldown:
+            return None
+        if not best.wall_s < (1.0 - self.config.hysteresis) * cur_wall:
+            return None
+        switch = PlanSwitch(step=step, old=cur, new=new,
+                            old_wall_s=float(cur_wall),
+                            new_wall_s=float(best.wall_s))
+        self.current = new
+        self.switches.append(switch)
+        self._last_switch_step = step
+        return switch
+
+    def to_json(self) -> dict:
+        """Run summary for dryrun-style records / logs."""
+        return {
+            "config": dataclasses.asdict(self.config),
+            "current": self.current.to_json(),
+            "evals": self.evals,
+            "switches": [s.to_json() for s in self.switches],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Reachable cells (for the staticcheck auditor)
+# ---------------------------------------------------------------------------
+
+
+def reachable_cells(*, num_stages: int, num_layers: int | None = None,
+                    v_cap: int = 4,
+                    wire_candidates=WIRE_AUTO) -> list:
+    """Every ``(wire_dtype, v)`` lowering cell the re-planner can switch
+    into, for the invariant auditor (``analysis/staticcheck``).
+
+    The auditor's lowering grammar depends on the codec and the
+    interleave factor; k only changes shapes (padding is exercised by
+    the fixture's ragged k), so cells collapse over k.  Feasibility
+    mirrors ``choose_plan``: v ranges over ``PlanInputs.feasible_v`` and
+    the codec over ``wire_candidates``, each normalized through
+    ``Plan`` so aliases cannot smuggle in duplicate cells.
+    """
+    probe = PlanInputs(num_stages=num_stages, stage_fwd_s=1.0,
+                       stage_bwd_s=2.0, link_s=0.1, v_cap=v_cap,
+                       num_layers=num_layers)
+    seen, cells = set(), []
+    for wd in wire_candidates:
+        norm = Plan(stages=num_stages, k=1, wire_dtype=wd).wire_dtype
+        for v in probe.feasible_v():
+            cell = (norm, v)
+            if cell not in seen:
+                seen.add(cell)
+                cells.append(cell)
+    return cells
+
+
+def reachable_plans(inputs: PlanInputs,
+                    wire_candidates=WIRE_AUTO) -> list:
+    """Full ``Plan`` set a ``Replanner`` over ``inputs`` can reach
+    (cartesian feasible grid; used by tests and capacity estimates —
+    the compile cache's worst case is one entry per element)."""
+    out = []
+    for wd in wire_candidates:
+        for v in inputs.feasible_v():
+            for k in range(1, max(1, inputs.k_cap) + 1):
+                out.append(Plan(stages=inputs.num_stages, k=k, v=v,
+                                wire_dtype=wd))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Compile cache + state carry-over (the cheap-switch machinery)
+# ---------------------------------------------------------------------------
+
+
+class PlanCellCache:
+    """Memoizes expensive per-plan artifacts by plan **cell**.
+
+    ``build(plan)`` is the caller's factory — typically returning the
+    jitted train step for that cell (``launch/train.py`` passes its
+    ``make_step``).  Re-entering a previously visited cell is a dict
+    hit: no re-trace, no re-compile.  ``state_template`` additionally
+    memoizes ``jax.eval_shape`` results per cell, so shape/dtype
+    bookkeeping for a candidate plan (e.g. sizing the EF buffer before
+    committing to a switch) costs no FLOPs.
+    """
+
+    def __init__(self, build):
+        self._build = build
+        self._entries: dict = {}
+        self._templates: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, plan: Plan):
+        key = plan.cell()
+        if key in self._entries:
+            self.hits += 1
+        else:
+            self.misses += 1
+            self._entries[key] = self._build(plan)
+        return self._entries[key]
+
+    def state_template(self, plan: Plan, fn, *args, **kwargs):
+        """``jax.eval_shape(fn, *args)`` memoized under this plan's
+        cell (``fn`` must be cell-deterministic)."""
+        key = plan.cell()
+        if key not in self._templates:
+            import jax
+            self._templates[key] = jax.eval_shape(fn, *args, **kwargs)
+        return self._templates[key]
+
+    def __len__(self):
+        return len(self._entries)
+
+    def __contains__(self, plan: Plan):
+        return plan.cell() in self._entries
+
+
+def carry_state(state: dict, new_plan: Plan, *, cfg, batch: int,
+                seq: int, axis: str = "pod",
+                shardings: dict | None = None) -> dict:
+    """Move training state across a plan switch, checkpoint-free.
+
+    Params/opt-state/step transfer unchanged; the ``wire_ef`` buffer is
+    rebuilt for the new cell under the carry-over rules in the module
+    docstring (exact carry when the shape is unchanged, zero reset when
+    k/v move it, drop/create on topk<->dense).  ``shardings`` (a pytree
+    of target shardings keyed like ``state``) triggers an eager
+    ``device_put`` re-shard; with None, jit re-shards lazily on the
+    first post-switch step.
+    """
+    from repro.parallel.pipeline import PipelineSpec, wire_ef_zeros
+    new_state = dict(state)
+    old_ef = new_state.pop("wire_ef", None)
+    spec = PipelineSpec.from_plan(new_plan, axis=axis)
+    new_ef = wire_ef_zeros(cfg, spec, batch, seq)
+    if new_ef is not None:
+        if old_ef is not None and tuple(old_ef.shape) == tuple(new_ef.shape):
+            new_ef = old_ef            # exact carry-over
+        new_state["wire_ef"] = new_ef
+    if shardings:
+        import jax
+        new_state = {k: jax.device_put(v, shardings[k])
+                     if k in shardings else v
+                     for k, v in new_state.items()}
+    return new_state

@@ -49,3 +49,80 @@ def ue_rates(p_ue_dbm, d_m, ch: ChannelParams):
     r_u = shannon_rate(p_ue_dbm, d_m, ch)
     r_d = shannon_rate(ch.p_bs_dbm, d_m, ch)
     return r_u, r_d
+
+
+# ---------------------------------------------------------------------------
+# Scripted link drift (the AC²P²SL premise: the channel is not constant).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthTrace:
+    """Piecewise-constant link bandwidth as a function of training step.
+
+    The deterministic drift driver for the online re-planner's tests and
+    the ``replan_drift`` benchmark: ``at(step)`` returns the wire
+    bandwidth in BYTES/s in force at that step.  ``steps`` are ascending
+    change points; ``bw_Bps[i]`` applies from ``steps[i]`` (inclusive)
+    until the next change point, ``bw_Bps[0]`` before ``steps[0]`` too
+    when ``steps[0] > 0`` is not given — construct with ``steps[0] == 0``
+    to be explicit.
+    """
+
+    steps: tuple
+    bw_Bps: tuple
+
+    def __post_init__(self):
+        if len(self.steps) != len(self.bw_Bps) or not self.steps:
+            raise ValueError(
+                f"BandwidthTrace needs matching non-empty steps/bw_Bps, "
+                f"got {len(self.steps)} steps / {len(self.bw_Bps)} rates")
+        if list(self.steps) != sorted(set(int(s) for s in self.steps)):
+            raise ValueError(
+                f"BandwidthTrace steps must be strictly ascending, got "
+                f"{self.steps}")
+        if any(not bw > 0 for bw in self.bw_Bps):
+            raise ValueError(f"bandwidths must be > 0, got {self.bw_Bps}")
+        object.__setattr__(self, "steps", tuple(int(s) for s in self.steps))
+        object.__setattr__(self, "bw_Bps",
+                           tuple(float(b) for b in self.bw_Bps))
+
+    def at(self, step: int) -> float:
+        """Bandwidth (B/s) in force at ``step``."""
+        bw = self.bw_Bps[0]
+        for s, b in zip(self.steps, self.bw_Bps):
+            if step >= s:
+                bw = b
+        return bw
+
+    @property
+    def change_points(self) -> tuple:
+        """Steps at which the bandwidth actually changes value."""
+        out, prev = [], None
+        for s, b in zip(self.steps, self.bw_Bps):
+            if prev is None or b != prev:
+                out.append(s)
+            prev = b
+        return tuple(out[1:])   # the t=first entry is the initial state
+
+
+def bandwidth_step_trace(before_Bps: float, after_Bps: float,
+                         at_step: int) -> BandwidthTrace:
+    """The canonical drift scenario: one bandwidth step at ``at_step``."""
+    return BandwidthTrace(steps=(0, int(at_step)),
+                          bw_Bps=(before_Bps, after_Bps))
+
+
+def shannon_trace(ch_by_step, p_tx_dbm: float, d_m: float,
+                  efficiency: float = 1.0) -> BandwidthTrace:
+    """Channel-model-driven trace: ``{step: ChannelParams}`` -> the wire
+    bandwidth (BYTES/s) the Shannon rate (eqs (5)-(6)) sustains at each
+    change point.  This is how a physical-layer event (bandwidth
+    reallocation, a UE moving, interference raising the noise floor)
+    becomes the piecewise link model the re-planner tracks; ``efficiency``
+    derates the information-theoretic bound to a deliverable goodput.
+    """
+    steps = sorted(int(s) for s in ch_by_step)
+    rates = [float(shannon_rate(p_tx_dbm, d_m, ch_by_step[s])) / 8.0
+             * efficiency for s in steps]
+    return BandwidthTrace(steps=tuple(steps), bw_Bps=tuple(rates))

@@ -8,7 +8,7 @@ collect and run in hermetic environments.  It covers exactly the API
 surface those tests use:
 
     from hypothesis import given, settings, strategies as st
-    st.integers / st.sampled_from / st.booleans / st.lists
+    st.integers / st.floats / st.sampled_from / st.booleans / st.lists
 
 Semantics: ``@given`` turns the test into a zero-argument function that
 replays ``max_examples`` (from ``@settings``, default 10) examples drawn
@@ -35,6 +35,9 @@ class _Strategy:
 def integers(min_value, max_value):
     return _Strategy(lambda rng: rng.randint(min_value, max_value))
 
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
 def sampled_from(elements):
     elements = list(elements)
     return _Strategy(lambda rng: rng.choice(elements))
@@ -50,6 +53,7 @@ def lists(elements, min_size: int = 0, max_size: int = 10):
 
 strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = integers
+strategies.floats = floats
 strategies.sampled_from = sampled_from
 strategies.booleans = booleans
 strategies.lists = lists

@@ -1,0 +1,514 @@
+"""Adaptive online re-planning (repro.training.replan) and the unified
+``Plan`` currency it switches between.
+
+Three lanes:
+
+* jax-free unit/property tests of the decision machinery — ``Plan`` JSON
+  round-trip + normalization, ``ReplanConfig`` parsing, the link
+  estimator's affine fit, and the hysteresis gate's two defining
+  properties (no flapping under stationary noise; exactly one switch
+  under a single bandwidth step).
+* in-process jax tests of the cheap-switch machinery (``PlanCellCache``
+  keying, all four ``carry_state`` EF-buffer transitions) — single
+  device, no subprocess.
+* one slow-lane e2e: the real launcher on 8 host devices with a
+  scripted mid-training bandwidth drop re-plans EXACTLY once, the loss
+  stays finite through the switch, and training still converges.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.autotune import (WIRE_AUTO, Plan, PlanInputs,
+                                     choose_plan)
+from repro.training.replan import (LinkEstimator, PlanCellCache,
+                                   ReplanConfig, Replanner, apply_hints,
+                                   reachable_cells, reachable_plans)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def base_inputs(**kw):
+    """A comm-bound two-stage cell with a codec-able hop (act_hop_bytes
+    set so link_bw hints can be folded back into link_s)."""
+    kw.setdefault("num_stages", 2)
+    kw.setdefault("stage_fwd_s", 0.1)
+    kw.setdefault("stage_bwd_s", 0.2)
+    kw.setdefault("link_s", 0.01)
+    kw.setdefault("hop_overhead_s", 0.002)
+    kw.setdefault("k_cap", 16)
+    kw.setdefault("v_cap", 4)
+    kw.setdefault("num_layers", 8)
+    kw.setdefault("act_bytes", 2.0)
+    kw.setdefault("act_hop_bytes", 4.0e8)
+    kw.setdefault("d_model", 1024)
+    return PlanInputs(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Plan: the single currency
+# ---------------------------------------------------------------------------
+
+WIRES = ["none", "int8", "fp8", "int8+topk0.25", "fp8+topk0.5"]
+
+
+@settings(max_examples=60, deadline=None)
+@given(stages=st.integers(1, 8), k=st.integers(1, 64),
+       v=st.integers(1, 8), wire=st.sampled_from(WIRES))
+def test_plan_json_round_trip(stages, k, v, wire):
+    """to_json -> from_json is the identity, and the round-tripped plan
+    hashes into the same compile-cache cell."""
+    plan = Plan(stages=stages, k=k, v=v, wire_dtype=wire)
+    doc = json.loads(json.dumps(plan.to_json()))   # through real JSON
+    back = Plan.from_json(doc)
+    assert back == plan
+    assert back.cell() == plan.cell()
+    assert hash(back) == hash(plan)
+    assert doc["schema"] == 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(frac=st.sampled_from([0.25, 0.5, 0.1, 0.75]),
+       base=st.sampled_from(["int8", "fp8"]))
+def test_plan_wire_normalization(frac, base):
+    """Codec spellings canonicalize at construction: case, whitespace
+    and trailing zeros cannot mint distinct cache cells."""
+    canonical = Plan(stages=2, k=4, wire_dtype=f"{base}+topk{frac}")
+    sloppy = Plan(stages=2, k=4,
+                  wire_dtype=f"  {base.upper()}+TOPK{frac:.4f} ")
+    assert sloppy == canonical
+    assert sloppy.cell() == canonical.cell()
+
+
+def test_plan_validation_rejects_garbage():
+    with pytest.raises(ValueError):
+        Plan(stages=0, k=1)
+    with pytest.raises(ValueError):
+        Plan(stages=2, k=1, v=-1)
+    with pytest.raises(ValueError):
+        Plan(stages=2, k="four")
+    with pytest.raises(ValueError):
+        Plan(stages=2, k=True)          # bools are not micro-batch counts
+    with pytest.raises(ValueError):
+        Plan(stages=2, k=1, wire_dtype="int3+topk0.5")
+
+
+def test_plan_from_json_schema_gate():
+    plan = Plan(stages=2, k=4, v=2, wire_dtype="int8")
+    doc = plan.to_json()
+    doc["schema"] = 99
+    with pytest.raises(ValueError, match="schema"):
+        Plan.from_json(doc)
+    # missing schema reads as v1 (hand-written JSON stays usable)
+    doc = plan.to_json()
+    del doc["schema"]
+    assert Plan.from_json(doc) == plan
+    with pytest.raises(ValueError, match="missing"):
+        Plan.from_json({"stages": 2})
+
+
+# ---------------------------------------------------------------------------
+# ReplanConfig: the --replan grammar
+# ---------------------------------------------------------------------------
+
+
+def test_replan_config_parse():
+    for off in (None, "off", "none", "0", "false", " OFF "):
+        assert ReplanConfig.parse(off) is None
+    for on in ("on", "", "default"):
+        assert ReplanConfig.parse(on) == ReplanConfig()
+    cfg = ReplanConfig.parse("every:10,hysteresis:0.2,cooldown:5")
+    assert (cfg.every, cfg.hysteresis, cfg.cooldown) == (10, 0.2, 5)
+    with pytest.raises(ValueError, match="unknown"):
+        ReplanConfig.parse("cadence:10")
+    with pytest.raises(ValueError, match="key:value"):
+        ReplanConfig.parse("every=10")
+    with pytest.raises(ValueError):
+        ReplanConfig.parse("every:0")
+    with pytest.raises(ValueError):
+        ReplanConfig.parse("hysteresis:1.5")
+    # describe() round-trips through parse
+    cfg = ReplanConfig(every=7, hysteresis=0.05, cooldown=3)
+    assert ReplanConfig.parse(cfg.describe()) == cfg
+
+
+# ---------------------------------------------------------------------------
+# LinkEstimator: the in-loop ppermute probe
+# ---------------------------------------------------------------------------
+
+
+def test_link_estimator_affine_fit_recovers_overhead():
+    """Samples at distinct sizes separate per-message overhead from
+    bandwidth, exactly like benchmarks/ppermute_probe's fit."""
+    bw, oh = 1e9, 2e-3
+    est = LinkEstimator()
+    for nbytes in (1e6, 4e6, 16e6, 64e6):
+        est.observe(nbytes, oh + nbytes / bw)
+    assert est.bw_Bps == pytest.approx(bw, rel=1e-6)
+    assert est.overhead_s == pytest.approx(oh, rel=1e-6)
+    hints = est.hints()
+    assert hints["link_bw_Bps"] == pytest.approx(bw, rel=1e-6)
+    assert hints["hop_overhead_s"] == pytest.approx(oh, rel=1e-6)
+
+
+def test_link_estimator_single_size_degenerates_to_bandwidth():
+    est = LinkEstimator()
+    est.observe(1e6, 2e-3)
+    est.observe(1e6, 2e-3)
+    assert est.bw_Bps == pytest.approx(5e8)
+    assert est.overhead_s is None          # can't separate without spread
+
+
+def test_link_estimator_bandwidth_feed_is_ewma_smoothed():
+    est = LinkEstimator(ewma=0.5)
+    est.observe_bandwidth(1e9)
+    est.observe_bandwidth(2e9)
+    assert est.bw_Bps == pytest.approx(1.5e9)
+    est.observe_bandwidth(0.0)             # junk readings are dropped
+    assert est.bw_Bps == pytest.approx(1.5e9)
+
+
+def test_apply_hints_folds_measurements():
+    inp = base_inputs()
+    # bandwidth hint re-derives link_s through act_hop_bytes
+    out = apply_hints(inp, {"link_bw_Bps": 4.0e10})
+    assert out.link_s == pytest.approx(4.0e8 / 4.0e10)
+    # compute drift scales both stage times
+    out = apply_hints(inp, {"stage_time_scale": 2.0})
+    assert out.stage_fwd_s == pytest.approx(0.2)
+    assert out.stage_bwd_s == pytest.approx(0.4)
+    # direct overrides win over the scale
+    out = apply_hints(inp, {"stage_time_scale": 2.0, "stage_fwd_s": 0.7})
+    assert out.stage_fwd_s == pytest.approx(0.7)
+    assert out.stage_bwd_s == pytest.approx(0.4)
+    # unknown keys are ignored; no hints returns the inputs unchanged
+    assert apply_hints(inp, {"step_time_ewma_s": 1.0}) is inp
+    assert apply_hints(inp, {}) is inp
+
+
+# ---------------------------------------------------------------------------
+# The hysteresis gate: the two defining properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), noise=st.floats(0.01, 0.15))
+def test_no_flap_under_stationary_noise(seed, noise):
+    """THE no-flap property: a stationary-but-noisy channel must never
+    open the gate.  Both walls in the comparison are computed on the
+    same refreshed inputs, so multiplicative noise moves them together
+    and the hysteresis margin only reacts to relative regime changes."""
+    rng = np.random.default_rng(seed)
+    inp = base_inputs()
+    bw0 = inp.act_hop_bytes / inp.link_s
+    rp = Replanner(inp, choose_plan(inp, wire_candidates=WIRE_AUTO).plan,
+                   ReplanConfig(every=5, hysteresis=0.1))
+    for step in range(1, 101):
+        rp.observe_bandwidth(bw0 * (1.0 + noise * rng.standard_normal()))
+        rp.maybe_replan(step)
+    assert rp.evals == 20
+    assert rp.switches == []
+
+
+def test_single_drift_switches_exactly_once():
+    """An 8x bandwidth drop: the planner must notice, switch once with a
+    gain clearing the hysteresis margin, then hold the new plan — the
+    EWMA's convergence tail after the step must NOT produce a second
+    switch."""
+    inp = base_inputs()
+    bw0 = inp.act_hop_bytes / inp.link_s
+    initial = choose_plan(inp, wire_candidates=WIRE_AUTO).plan
+    rp = Replanner(inp, initial, ReplanConfig(every=5, hysteresis=0.1))
+    for step in range(1, 201):
+        rp.observe_bandwidth(bw0 if step < 80 else bw0 / 8.0)
+        rp.maybe_replan(step)
+    assert len(rp.switches) == 1
+    sw = rp.switches[0]
+    assert sw.step >= 80
+    assert sw.gain > 0.1                      # cleared the margin
+    assert sw.new == rp.current != initial
+    assert sw.new.stages == initial.stages    # S is pinned
+    # the switch log round-trips (train.py embeds it in --plan-out)
+    doc = json.loads(json.dumps(rp.to_json()))
+    assert len(doc["switches"]) == 1
+    assert Plan.from_json(doc["switches"][0]["new"]) == sw.new
+    assert Plan.from_json(doc["current"]) == rp.current
+
+
+def test_cooldown_defers_the_switch():
+    inp = base_inputs()
+    bw0 = inp.act_hop_bytes / inp.link_s
+    initial = choose_plan(inp, wire_candidates=WIRE_AUTO).plan
+
+    def run(cooldown):
+        rp = Replanner(inp, initial,
+                       ReplanConfig(every=5, hysteresis=0.1,
+                                    cooldown=cooldown))
+        # force an early switch, then a second regime change
+        for step in range(1, 201):
+            bw = bw0 if step < 20 else bw0 / 8.0
+            rp.observe_bandwidth(bw)
+            rp.maybe_replan(step)
+        return rp
+
+    free = run(0)
+    held = run(1000)
+    assert len(free.switches) >= 1
+    assert len(held.switches) == len(free.switches)  # first switch unaffected
+    # a second drop inside the cooldown would be held; just assert the
+    # bookkeeping: cooldown never creates switches
+    assert held.switches[0].step == free.switches[0].step
+
+
+def test_replanner_pins_the_stage_count():
+    inp = base_inputs(num_stages=2)
+    with pytest.raises(ValueError, match="S=4"):
+        Replanner(inp, Plan(stages=4, k=8), ReplanConfig())
+
+
+def test_watchdog_telemetry_feeds_stage_time_scale():
+    """Step-time drift reaches the planner as a stage-time multiplier,
+    anchored at the first healthy EWMA (so the anchor itself is not
+    'drift')."""
+    inp = base_inputs()
+    rp = Replanner(inp, choose_plan(inp, wire_candidates=WIRE_AUTO).plan,
+                   ReplanConfig(every=5))
+    for _ in range(20):
+        rp.observe_step(0, 0.1)
+    first = rp.refreshed_inputs()           # calibrates the baseline
+    assert first.stage_fwd_s == pytest.approx(inp.stage_fwd_s, rel=0.05)
+    for _ in range(200):                    # compute slows down 3x
+        rp.observe_step(0, 0.3)
+    drifted = rp.refreshed_inputs()
+    scale = drifted.stage_fwd_s / inp.stage_fwd_s
+    assert 2.0 < scale <= 3.1               # EWMA-converged toward 3x
+    assert drifted.stage_bwd_s / inp.stage_bwd_s == pytest.approx(scale)
+    assert drifted.link_s == inp.link_s     # link is billed separately
+
+
+# ---------------------------------------------------------------------------
+# Reachable cells (the staticcheck contract) + the compile cache
+# ---------------------------------------------------------------------------
+
+
+def test_reachable_cells_match_staticcheck_audit_grid():
+    """The invariant auditor must audit EXACTLY the lowering cells the
+    re-planner can switch into — the grid is derived, not hand-listed."""
+    from repro.analysis.staticcheck import AUDIT_CELLS, _CELL
+    cells = reachable_cells(num_stages=_CELL["num_stages"],
+                            num_layers=_CELL["num_layers"], v_cap=4)
+    assert tuple(cells) == AUDIT_CELLS
+    assert len(cells) == len(set(cells))
+    # the audited codecs are the planner's candidate set, normalized
+    assert {w for w, _v in cells} \
+        == {Plan(stages=2, k=1, wire_dtype=w).wire_dtype for w in WIRE_AUTO}
+
+
+def test_reachable_cells_dedupe_aliased_codecs():
+    cells = reachable_cells(num_stages=2, num_layers=4, v_cap=2,
+                            wire_candidates=("int8+topk0.25",
+                                             "INT8+topk0.250"))
+    assert cells == [("int8+topk0.25", 1), ("int8+topk0.25", 2)]
+
+
+def test_reachable_plans_cover_the_feasible_grid():
+    inp = base_inputs(num_layers=8, v_cap=4, k_cap=4)
+    plans = reachable_plans(inp, wire_candidates=("none", "int8"))
+    # v in feasible_v() (layers%(S*v)==0), k in 1..k_cap, 2 codecs
+    assert len(plans) == 2 * len(inp.feasible_v()) * 4
+    assert len({p.cell() for p in plans}) == len(plans)
+    assert all(p.stages == 2 for p in plans)
+
+
+def test_plan_cell_cache_keys_on_the_cell():
+    built = []
+    cache = PlanCellCache(lambda p: built.append(p) or f"step:{p}")
+    a = Plan(stages=2, k=4, v=2, wire_dtype="int8+topk0.25")
+    alias = Plan(stages=2, k=4, v=2, wire_dtype="INT8+TOPK0.250")
+    other = Plan(stages=2, k=4, v=1, wire_dtype="int8+topk0.25")
+    assert cache.get(a) == cache.get(alias)          # one build
+    cache.get(other)
+    cache.get(a)
+    assert (cache.misses, cache.hits) == (2, 2)
+    assert len(cache) == 2 and a in cache and alias in cache
+    assert built == [a, other]
+
+
+# ---------------------------------------------------------------------------
+# carry_state: the four EF-buffer transitions (in-process jax, 1 device)
+# ---------------------------------------------------------------------------
+
+
+def _carry_fixture():
+    import jax.numpy as jnp
+    from repro.models import LMConfig
+    cfg = LMConfig(name="t", num_layers=4, d_model=64, n_heads=4, n_kv=4,
+                   d_ff=128, vocab=128)
+    state = {"params": {"w": jnp.ones((2, 2))},
+             "opt_state": {"m": jnp.zeros((2, 2))},
+             "step": jnp.zeros((), jnp.int32)}
+    return cfg, state, 6, 16                     # batch 6 -> ragged at k=4
+
+
+def _with_ef(state, cfg, plan, batch, seq, fill=0.0):
+    import jax.numpy as jnp
+    from repro.parallel.pipeline import PipelineSpec, wire_ef_zeros
+    ef = wire_ef_zeros(cfg, PipelineSpec.from_plan(plan), batch, seq)
+    assert ef is not None
+    state = dict(state)
+    state["wire_ef"] = ef + fill if fill else ef
+    return state, tuple(ef.shape)
+
+
+def test_carry_state_dense_to_topk_creates_fresh_ef():
+    from repro.training.replan import carry_state
+    cfg, state, batch, seq = _carry_fixture()
+    out = carry_state(state, Plan(stages=2, k=2, wire_dtype="int8+topk0.25"),
+                      cfg=cfg, batch=batch, seq=seq)
+    assert "wire_ef" in out
+    assert float(np.abs(np.asarray(out["wire_ef"])).max()) == 0.0
+    assert out["params"] is state["params"]      # everything else carried
+    assert out["opt_state"] is state["opt_state"]
+
+
+def test_carry_state_same_shape_carries_exactly():
+    """Codec change at equal (k, v): the residual is un-flushed gradient
+    mass and must survive the switch bit-for-bit."""
+    from repro.training.replan import carry_state
+    cfg, state, batch, seq = _carry_fixture()
+    old = Plan(stages=2, k=3, wire_dtype="int8+topk0.25")
+    state, shape = _with_ef(state, cfg, old, batch, seq, fill=1.5)
+    out = carry_state(state, Plan(stages=2, k=3, wire_dtype="fp8+topk0.5"),
+                      cfg=cfg, batch=batch, seq=seq)
+    assert tuple(out["wire_ef"].shape) == shape
+    assert float(np.asarray(out["wire_ef"]).min()) == 1.5
+
+
+def test_carry_state_shape_change_resets_to_zero():
+    """k moves (ragged: mb = ceil(6/3)=2 -> ceil(6/4)=2 but ticks move):
+    the buffer is rebuilt at the new shape, zeroed."""
+    from repro.training.replan import carry_state
+    cfg, state, batch, seq = _carry_fixture()
+    old = Plan(stages=2, k=3, wire_dtype="int8+topk0.25")
+    state, old_shape = _with_ef(state, cfg, old, batch, seq, fill=1.5)
+    out = carry_state(state, Plan(stages=2, k=4, wire_dtype="int8+topk0.25"),
+                      cfg=cfg, batch=batch, seq=seq)
+    new_shape = tuple(out["wire_ef"].shape)
+    assert new_shape != old_shape
+    assert float(np.abs(np.asarray(out["wire_ef"])).max()) == 0.0
+
+
+def test_carry_state_topk_to_dense_drops_the_ef():
+    from repro.training.replan import carry_state
+    cfg, state, batch, seq = _carry_fixture()
+    old = Plan(stages=2, k=3, wire_dtype="int8+topk0.25")
+    state, _ = _with_ef(state, cfg, old, batch, seq, fill=1.5)
+    out = carry_state(state, Plan(stages=2, k=3, wire_dtype="int8"),
+                      cfg=cfg, batch=batch, seq=seq)
+    assert "wire_ef" not in out
+    assert out["params"] is state["params"]
+
+
+# ---------------------------------------------------------------------------
+# The shared CLI surface (launch/plan_args) and the legacy alias
+# ---------------------------------------------------------------------------
+
+
+def _parse(flavor, argv):
+    import argparse
+    from repro.launch.plan_args import add_plan_args
+    ap = argparse.ArgumentParser()
+    add_plan_args(ap, flavor=flavor)
+    return ap.parse_args(argv)
+
+
+def test_legacy_pipeline_v_alias_train_flavor():
+    """--pipeline-v keeps working as a deprecated alias: both spellings
+    bind to args.virtual_stages with identical semantics."""
+    old = _parse("train", ["--pipeline-v", "2"])
+    new = _parse("train", ["--virtual-stages", "2"])
+    assert old.virtual_stages == new.virtual_stages == "2"
+    assert _parse("train", []).virtual_stages is None
+
+
+def test_legacy_pipeline_v_alias_lower_flavor():
+    old = _parse("lower", ["--pipeline-v", "2", "--pipeline-k", "4"])
+    new = _parse("lower", ["--virtual-stages", "2", "--pipeline-k", "4"])
+    assert old.virtual_stages == new.virtual_stages == 2   # typed int here
+    assert old.pipeline_k == 4
+    assert _parse("lower", []).virtual_stages == 1
+
+
+def test_replan_config_helper_exits_on_bad_spec():
+    import argparse
+    from repro.launch.plan_args import add_plan_args, replan_config
+    ap = argparse.ArgumentParser()
+    add_plan_args(ap, flavor="train")
+    args = ap.parse_args(["--replan", "every:3,hysteresis:0.05"])
+    cfg = replan_config(args)
+    assert (cfg.every, cfg.hysteresis) == (3, 0.05)
+    assert replan_config(ap.parse_args([])) is None
+    with pytest.raises(SystemExit, match="--replan"):
+        replan_config(ap.parse_args(["--replan", "bogus:1"]))
+
+
+# ---------------------------------------------------------------------------
+# Slow lane: the launcher re-plans across a real switch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_e2e_bandwidth_drop_replans_once(tmp_path):
+    """The full loop on 8 host devices: a scripted 20x bandwidth drop at
+    step 6 makes the re-planner switch the live pipeline EXACTLY once
+    (codec turns on), state carries across the switch (grads/loss stay
+    finite every step), and training still converges end-to-end."""
+    trace = tmp_path / "trace.json"
+    plan_out = tmp_path / "plan.json"
+    metrics = tmp_path / "metrics.json"
+    trace.write_text(json.dumps({"steps": [0, 6], "bw_Bps": [4e10, 2e9]}))
+
+    code = textwrap.dedent(f"""
+        from repro.launch.train import main
+        main(["--arch", "qwen1.5-4b", "--size", "smoke", "--steps", "12",
+              "--batch", "4", "--seq", "16", "--log-every", "1",
+              "--pipeline-stages", "2",
+              "--replan", "every:3,hysteresis:0.05",
+              "--replan-trace", {str(trace)!r},
+              "--plan-out", {str(plan_out)!r},
+              "--metrics-out", {str(metrics)!r}])
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+
+    doc = json.loads(plan_out.read_text())
+    replan = doc["replan"]
+    assert len(replan["switches"]) == 1
+    sw = replan["switches"][0]
+    assert sw["step"] > 6                         # after the drop landed
+    assert sw["gain"] > 0.05                      # cleared the margin
+    old, new = Plan.from_json(sw["old"]), Plan.from_json(sw["new"])
+    assert old.stages == new.stages == 2          # S pinned
+    assert new != old
+    assert Plan.from_json(replan["current"]) == new
+    # the launcher really ran the switched cell: a post-switch compile
+    # happened ("2 cell compile(s)") and every step's loss is finite
+    assert "2 cell compile(s)" in out.stdout
+    history = json.loads(metrics.read_text())
+    assert len(history) == 12
+    losses = [row["loss"] for row in history]
+    assert np.all(np.isfinite(losses))
+    # convergence survives the switch: strictly below the starting loss
+    # at the end, and no post-switch blow-up above the pre-switch peak
+    assert losses[-1] < losses[0]
+    assert max(losses[sw["step"]:]) <= max(losses[:sw["step"]]) + 0.5
