@@ -80,7 +80,8 @@ def main(argv=None):
 
     from benchmarks import (ao_convergence, fig3_accuracy, fig4_ue_scaling,
                             fig5_bandwidth, pipeline_plan, replan_drift,
-                            roofline_report, staticcheck_gate, wire_codec)
+                            roofline_report, staticcheck_gate,
+                            streaming_smoke, wire_codec)
 
     benches = {
         "fig4_ue_scaling": fig4_ue_scaling.main,
@@ -92,6 +93,7 @@ def main(argv=None):
         "wire_codec": wire_codec.main,
         "replan_drift": replan_drift.main,
         "staticcheck_gate": staticcheck_gate.main,
+        "streaming_smoke": streaming_smoke.main,
     }
     selected = list(benches)
     if args.only:

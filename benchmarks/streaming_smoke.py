@@ -1,0 +1,71 @@
+"""Streaming-runtime smoke bench: the async UE->BS loop over a REAL
+loopback socket, reduced to its deterministic outputs.
+
+One ``repro.runtime`` run — N UE client tasks, the BS dispatcher, the
+``int8+topk0.25`` codec with per-client error feedback on the gradient
+hop — reporting only what is bit-reproducible: the per-round loss
+trajectory (arrival order cannot change it: per-arrival micro-steps use
+the pre-round params and the round reduction is sorted), the measured
+codec-payload bytes per hop against the planner's
+``wire_bytes_per_element(_bwd)`` billing, and the frame counts.  No
+timings, no QoS rates, no shaper — those are wall-clock-dependent and
+belong to ``--qos-out`` sidecars, not to the ``BENCH_pipeline.json``
+diff gate this row feeds.
+"""
+from __future__ import annotations
+
+import asyncio
+
+import numpy as np
+
+WIRE = "int8+topk0.25"
+CUT = 2
+SEQ = 16
+BATCH_PER_CLIENT = 2
+SEED = 0
+
+
+def main(quick: bool = True):
+    from repro.models import LMConfig
+    from repro.runtime.driver import run_streaming
+
+    n_clients, steps = (2, 4) if quick else (4, 8)
+    cfg = LMConfig(name="stream-smoke", num_layers=4, d_model=64,
+                   n_heads=4, n_kv=2, d_ff=64, vocab=64, dtype="float32")
+    res = asyncio.run(run_streaming(
+        cfg, cut=CUT, n_clients=n_clients, steps=steps,
+        batch_per_client=BATCH_PER_CLIENT, seq=SEQ, seed=SEED,
+        wire_dtype=WIRE, lr=1e-3))
+
+    losses = [float(x) for x in res["losses"]]
+    qos = res["qos"]
+    honesty = res["wire_honesty"]
+    out = {
+        "clients": n_clients,
+        "steps": steps,
+        "wire_dtype": WIRE,
+        "losses": losses,
+        "frames_in": qos["totals"]["frames_in"],
+        "payload_bytes_in": qos["totals"]["payload_bytes_in"],
+        "payload_bytes_out": qos["totals"]["payload_bytes_out"],
+        "uplink": honesty["uplink"],
+        "downlink": honesty["downlink"],
+        "honesty_ok": bool(all(r["ok"] for rows in honesty.values()
+                               for r in rows)),
+    }
+    assert all(np.isfinite(losses)), f"non-finite streamed loss: {losses}"
+    assert out["frames_in"] == n_clients * steps
+    assert out["honesty_ok"], honesty
+    up = honesty["uplink"][0]
+    dn = honesty["downlink"][0]
+    print(f"  {n_clients} UE x {steps} rounds over loopback, wire={WIRE}: "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    print(f"  uplink  {up['measured_bytes']} B/hop measured vs "
+          f"{up['billed_bytes']:.1f} billed")
+    print(f"  downlink {dn['measured_bytes']} B/hop measured vs "
+          f"{dn['billed_bytes']:.1f} billed (top-k + EF)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

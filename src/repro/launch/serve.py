@@ -84,10 +84,13 @@ def main(argv=None):
 
     key = jax.random.key(args.seed)
     out_tokens = []
+    # The prefill logits' argmax seeds the first decode; each decode's
+    # sampled output token is appended AFTER that decode runs, so all
+    # ``--gen`` decode steps land in the output (the old loop appended
+    # the pre-decode token and silently discarded the final decode's).
     tok = jnp.argmax(logits, axis=-1, keepdims=True).astype(jnp.int32)
     t0 = time.perf_counter()
     for i in range(args.gen):
-        out_tokens.append(np.asarray(tok[:, 0]))
         logits, serve_state = decode(params, serve_state, tok)
         if args.temperature > 0:
             key, sub = jax.random.split(key)
@@ -96,6 +99,7 @@ def main(argv=None):
             tok = tok.astype(jnp.int32)
         else:
             tok = jnp.argmax(logits, axis=-1, keepdims=True).astype(jnp.int32)
+        out_tokens.append(np.asarray(tok[:, 0]))
     jax.block_until_ready(logits)
     t_decode = time.perf_counter() - t0
 

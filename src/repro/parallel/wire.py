@@ -328,6 +328,101 @@ def topk_decode(q, idx, scale, d: int, out_dtype):
     return out.reshape(lead + (int(d),)).astype(out_dtype)
 
 
+# ---------------------------------------------------------------------------
+# Host-side (numpy) entry points — the streaming runtime's codec.
+#
+# The asyncio UE/BS runtime (repro/runtime/) moves the SAME payload format
+# over a real socket instead of a ppermute, from host memory, per frame —
+# tracing a jit per frame would dominate the hop.  These mirrors compute
+# the codec with numpy (+ the ml_dtypes float8 numpy already knows via
+# jax) on plain arrays; parity with the jnp path is tested elementwise in
+# tests/test_streaming.py, and byte counts are identical by construction
+# (same payload/scale/index shapes and dtypes).
+# ---------------------------------------------------------------------------
+
+
+def _host_quantize_blocks(blocks, base: str):
+    """numpy twin of ``training.compress.quantize_blocks``."""
+    import numpy as np
+    amax = np.max(np.abs(blocks), axis=-1, keepdims=True)
+    from repro.training.compress import qmax_for
+    scale = np.maximum(amax / np.float32(qmax_for(base)),
+                       np.float32(1e-12)).astype(np.float32)
+    scaled = (blocks / scale).astype(np.float32)
+    if base == "int8":
+        q = np.clip(np.round(scaled), -127, 127).astype(np.int8)
+    else:
+        q = scaled.astype(np.dtype(payload_dtype(base)))
+    return q, scale
+
+
+def host_encode(x, wire_dtype: str):
+    """Dense FORWARD-hop codec on a host numpy array.
+
+    np [..., d] -> (payload, fp32 scales) in exactly the ``encode``
+    format; 'none' and the degenerate-block net-loss condition return
+    ``(x, None)`` — the raw passthrough the socket then ships verbatim,
+    matching the in-process fallback (and the planner's billing).
+    """
+    import numpy as np
+    base, _frac = parse_wire_dtype(wire_dtype)
+    x = np.asarray(x)
+    d = x.shape[-1]
+    if base == "none":
+        return x, None
+    if codec_net_loss(d, x.dtype.itemsize):
+        _warn_net_loss_once(wire_dtype, d, x.dtype)
+        return x, None
+    b = wire_block(d)
+    blocks = x.astype(np.float32).reshape(x.shape[:-1] + (d // b, b))
+    return _host_quantize_blocks(blocks, base)
+
+
+def host_decode(payload, scale, out_dtype):
+    """Inverse of ``host_encode`` (scale=None = raw passthrough)."""
+    import numpy as np
+    payload = np.asarray(payload)
+    if scale is None:
+        return payload.astype(out_dtype)
+    x = payload.astype(np.float32) * np.asarray(scale)
+    return x.reshape(
+        x.shape[:-2] + (x.shape[-2] * x.shape[-1],)).astype(out_dtype)
+
+
+def host_topk_encode(x, wire_dtype: str):
+    """Top-k BACKWARD-hop codec on a host numpy array: f32 [..., d] ->
+    (payload [..., kk], indices [..., kk] int16/int32, fp32 per-row
+    scale [..., 1]) in the ``topk_encode`` wire format.  Selection
+    mirrors ``jax.lax.top_k`` (descending |x|, ties broken toward the
+    lower index) so the two paths keep identical support sets."""
+    import numpy as np
+    base, frac = parse_wire_dtype(wire_dtype)
+    if frac is None:
+        raise ValueError(
+            f"wire_dtype {wire_dtype!r} has no top-k fraction — use the "
+            "dense host_encode/host_decode")
+    x = np.asarray(x)
+    d = x.shape[-1]
+    kk = topk_count(d, frac)
+    xf = x.astype(np.float32)
+    idx = np.argsort(-np.abs(xf), axis=-1, kind="stable")[..., :kk]
+    vals = np.take_along_axis(xf, idx, axis=-1)
+    q, scale = _host_quantize_blocks(vals, base)
+    idx_dt = np.int16 if int(d) <= 32767 else np.int32
+    return q, idx.astype(idx_dt), scale
+
+
+def host_topk_decode(q, idx, scale, d: int, out_dtype):
+    """Scatter a host top-k payload back into dense [..., d] rows."""
+    import numpy as np
+    q = np.asarray(q)
+    vals = q.astype(np.float32) * np.asarray(scale)
+    lead = q.shape[:-1]
+    out = np.zeros(lead + (int(d),), np.float32)
+    np.put_along_axis(out, np.asarray(idx).astype(np.int64), vals, axis=-1)
+    return out.astype(out_dtype)
+
+
 def _topk_hop(wire_dtype, axis_name, perm, g):
     """One top-k-coded hop of a (pre-corrected) f32 gradient payload:
     returns (received dense f32, locally-decoded dense f32).  The local

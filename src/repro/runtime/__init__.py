@@ -1,0 +1,32 @@
+"""Async multi-client streaming runtime: UE clients -> BS dispatcher
+over a real (loopback) socket, with measured per-hop link feeds.
+
+``protocol`` and ``qos`` are stdlib+numpy only and import eagerly; the
+jax-backed pieces (``UEClient``/``UESync``/``BSDispatcher``/
+``run_streaming``) load lazily so the frame format and QoS accounting
+stay importable on machines without an accelerator stack.
+"""
+from repro.runtime import protocol, qos
+from repro.runtime.protocol import Frame, pack_frame, read_frame, unpack_frame
+from repro.runtime.qos import ClientStats, QoSMonitor
+
+__all__ = [
+    "BSDispatcher", "ClientStats", "Frame", "QoSMonitor", "UEClient",
+    "UESync", "client_batches", "pack_frame", "protocol", "qos",
+    "read_frame", "run_streaming", "unpack_frame",
+]
+
+_LAZY = {
+    "BSDispatcher": "repro.runtime.bs",
+    "UEClient": "repro.runtime.ue",
+    "UESync": "repro.runtime.ue",
+    "client_batches": "repro.runtime.driver",
+    "run_streaming": "repro.runtime.driver",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

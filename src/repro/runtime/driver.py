@@ -1,0 +1,204 @@
+"""Orchestration + CLI for the async multi-client streaming runtime.
+
+``run_streaming`` wires the whole loop together in one process:
+
+    N ``UEClient`` tasks  --loopback TCP-->  one ``BSDispatcher``
+
+Each round every client runs its sub-cut shard, ships the coded cut
+activation over a REAL socket (optionally shaped to a Shannon-rate link
+by ``wireless.LinkShaper``), and gets the coded cut-activation gradient
+back; the dispatcher micro-steps per arrival (pipelining over ragged
+uplinks) and every hop's measured (bytes, seconds) feeds the online
+re-planner's ``LinkEstimator``.
+
+With the default equal shards, no gradient clipping, and codec 'none',
+the streamed run computes EXACTLY the same parameter trajectory as
+joint full-batch training of the unsplit model — the per-arrival BS
+micro-steps average to the full-batch gradient (mean of equal-shard
+means) and AdamW is elementwise.  tests/test_streaming.py holds the
+runtime to that.
+
+CLI::
+
+    python -m repro.runtime.driver --clients 4 --steps 20 \
+        --wire-dtype int8+topk0.25 --bw-Bps 2e6 --qos-out qos.json
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import sys
+
+
+def client_batches(cfg, client_id: int, n_clients: int,
+                   batch_per_client: int, seq: int, seed: int = 0):
+    """Client ``client_id``'s shard of the deterministic global stream.
+
+    Round ``step`` draws ``lm_batch_for(cfg, n_clients * batch_per_client,
+    seq, seed + step)`` and takes rows ``[cid*b, (cid+1)*b)`` — so the
+    union over clients of one round IS the full-batch reference batch,
+    which is what makes exact loss parity with joint training testable.
+    """
+    from repro.data import lm_batch_for
+    step = 0
+    while True:
+        batch = lm_batch_for(cfg, n_clients * batch_per_client, seq,
+                             seed=seed + step)
+        sl = slice(client_id * batch_per_client,
+                   (client_id + 1) * batch_per_client)
+        yield batch["tokens"][sl], batch["labels"][sl]
+        step += 1
+
+
+async def run_streaming(cfg, *, cut: int, n_clients: int, steps: int,
+                        batch_per_client: int, seq: int, seed: int = 0,
+                        wire_dtype: str = "none", lr: float = 1e-3,
+                        shaper=None, replanner=None, queue_depth: int = 2,
+                        stall_after_s: float = 0.25,
+                        qos=None, on_started=None) -> dict:
+    """Run the full streaming loop on loopback; returns a summary dict.
+
+    ``shaper`` (a ``wireless.LinkShaper`` or anything with
+    ``delay_s(nbytes)``) shapes BOTH directions; ``replanner`` is either
+    a ``training.replan.Replanner`` or a bare ``LinkEstimator`` — the
+    dispatcher only calls ``observe_hop``.  ``on_started(dispatcher,
+    clients)`` fires after the server binds, before clients run — the
+    hook tests use to mutate the link mid-run.
+    """
+    import jax
+
+    from repro.models import LM
+    from repro.runtime.bs import BSDispatcher
+    from repro.runtime.ue import UEClient, UESync
+    from repro.sl import lm_split
+    from repro.training.optim import adamw
+
+    model = LM(cfg)
+    params = model.init(jax.random.key(seed))
+    spec = lm_split(model, cut)
+    ue_params, bs_params = spec.split_params(params)
+
+    dispatcher = BSDispatcher(
+        spec, bs_params, adamw(lr), n_clients=n_clients,
+        wire_dtype=wire_dtype, queue_depth=queue_depth,
+        replanner=replanner, shaper=shaper, qos=qos,
+        stall_after_s=stall_after_s)
+    sync = UESync(ue_params, adamw(lr), n_clients)
+
+    ue_fwd = jax.jit(spec.ue_fwd)
+
+    def pullback(p, tokens, g):
+        _, vjp = jax.vjp(lambda q: spec.ue_fwd(q, tokens), p)
+        return vjp(g)[0]
+
+    ue_pullback = jax.jit(pullback)
+    clients = [
+        UEClient(cid, spec,
+                 client_batches(cfg, cid, n_clients, batch_per_client,
+                                seq, seed),
+                 sync, wire_dtype=wire_dtype, shaper=shaper,
+                 ue_fwd=ue_fwd, ue_pullback=ue_pullback)
+        for cid in range(n_clients)]
+
+    host, port = await dispatcher.start()
+    if on_started is not None:
+        on_started(dispatcher, clients)
+    try:
+        results = await asyncio.gather(
+            dispatcher.train(steps),
+            *(c.run(host, port, steps) for c in clients))
+    finally:
+        await dispatcher.close()
+    losses = results[0]
+
+    out = {
+        "losses": losses,
+        "final_loss": losses[-1] if losses else None,
+        "steps": steps,
+        "n_clients": n_clients,
+        "wire_dtype": wire_dtype,
+        "qos": dispatcher.qos.snapshot(),
+        "wire_honesty": dispatcher.wire_honesty(),
+        "params": {"ue": sync.params, "bs": dispatcher.bs_params},
+        "spec": spec,
+        "client_losses": {c.client_id: c.losses for c in clients},
+    }
+    if replanner is not None and hasattr(replanner, "hints"):
+        out["link_hints"] = replanner.hints()
+    elif replanner is not None and hasattr(replanner, "link"):
+        out["link_hints"] = replanner.link.hints()
+    return out
+
+
+def main(argv=None) -> dict:
+    from repro.models import LMConfig
+    from repro.training.replan import LinkEstimator
+    from repro.wireless import LinkShaper
+
+    ap = argparse.ArgumentParser(
+        description="async multi-client streaming SL over loopback TCP")
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--n-kv", type=int, default=2)
+    ap.add_argument("--d-ff", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=128)
+    ap.add_argument("--cut", type=int, default=2,
+                    help="UE-side depth l: embed + blocks[:l]")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch-per-client", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--wire-dtype", default="none",
+                    help="none | int8 | fp8 | <base>+topk<frac>")
+    ap.add_argument("--bw-Bps", type=float, default=0.0,
+                    help="emulated link rate; 0 = unshaped loopback")
+    ap.add_argument("--latency-s", type=float, default=0.0)
+    ap.add_argument("--queue-depth", type=int, default=2)
+    ap.add_argument("--stall-after-s", type=float, default=0.25)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--qos-out", default=None,
+                    help="write the QoS snapshot JSON here")
+    args = ap.parse_args(argv)
+
+    cfg = LMConfig(name="stream", num_layers=args.layers,
+                   d_model=args.d_model, n_heads=args.n_heads,
+                   n_kv=args.n_kv, d_ff=args.d_ff, vocab=args.vocab,
+                   dtype="float32")
+    shaper = (LinkShaper(args.bw_Bps, latency_s=args.latency_s)
+              if args.bw_Bps > 0 else None)
+    estimator = LinkEstimator()
+
+    result = asyncio.run(run_streaming(
+        cfg, cut=args.cut, n_clients=args.clients, steps=args.steps,
+        batch_per_client=args.batch_per_client, seq=args.seq,
+        seed=args.seed, wire_dtype=args.wire_dtype, lr=args.lr,
+        shaper=shaper, replanner=estimator,
+        queue_depth=args.queue_depth, stall_after_s=args.stall_after_s))
+
+    print(f"streaming: {args.clients} UE x {args.steps} steps "
+          f"wire={args.wire_dtype} "
+          f"loss {result['losses'][0]:.4f} -> {result['losses'][-1]:.4f}")
+    hints = result.get("link_hints") or {}
+    if hints:
+        bw = hints.get("link_bw_Bps")
+        oh = hints.get("hop_overhead_s")
+        print("  measured link: "
+              + (f"bw {bw:.3g} B/s" if bw else "bw n/a")
+              + (f", overhead {oh * 1e3:.3g} ms" if oh else ""))
+    honesty = result["wire_honesty"]
+    for direction, rows in honesty.items():
+        bad = [r for r in rows if not r["ok"]]
+        print(f"  wire honesty {direction}: "
+              f"{len(rows) - len(bad)}/{len(rows)} hops within 1%")
+    if args.qos_out:
+        with open(args.qos_out, "w") as f:
+            json.dump(result["qos"], f, indent=2, sort_keys=True)
+        print(f"  qos snapshot -> {args.qos_out}")
+    return result
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,237 @@
+"""Length-prefixed frame protocol for the UE -> BS streaming runtime.
+
+One frame on the wire::
+
+    u32 total_len | header (20 B) | meta (JSON) | payload sections
+
+    header = !4s B B H I I I
+             magic 'C2P2' | version | ftype | client_id
+             | step | meta_len | payload_len
+
+``payload`` is the concatenation of named binary sections; the meta JSON
+carries a ``sections`` table ``[[name, dtype, shape], ...]`` so the
+receiver can slice it back into numpy arrays with zero copies of the
+section bytes.  Sections named in ``PAYLOAD_SECTIONS`` are codec payload
+(what the planner bills as hop bytes); everything else (``labels``,
+control fields) is aux traffic the QoS monitor accounts separately —
+the same split ``analysis/staticcheck`` audits in compiled HLO, kept
+honest here on a real socket (tests/test_streaming.py asserts measured
+payload bytes match ``autotune.wire_bytes_per_element(_bwd)`` billing).
+
+The activation/gradient payload encodings are the host-side
+(``parallel/wire.py host_*``) twins of the in-process wire codec: dense
+base codec on the forward (activation) hop, ``+topk<frac>`` sparsification
+with per-client error feedback on the backward (gradient) hop, raw
+passthrough for 'none' and for the degenerate-block net-loss fallback.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"C2P2"
+VERSION = 1
+
+HELLO = 1     # client -> server: join (meta: wire_dtype, shapes)
+ACT = 2       # client -> server: coded cut activations + labels
+GRAD = 3      # server -> client: coded cut-activation gradient
+STATS = 4     # either direction: QoS/telemetry snapshot
+BYE = 5       # client -> server: clean shutdown
+
+_HEADER = struct.Struct("!4sBBHIII")
+_LEN = struct.Struct("!I")
+
+# section names whose bytes are CODEC PAYLOAD (billed hop bytes); the
+# rest of the frame (length prefix, header, meta JSON, aux sections such
+# as labels) is per-message overhead — the planner bills that separately
+# as hop_overhead_s, never as link bytes.
+PAYLOAD_SECTIONS = ("q", "scale", "idx", "raw")
+
+MAX_FRAME_BYTES = 1 << 30
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a section dtype name, including the ml_dtypes names
+    (float8_e4m3fn, bfloat16) numpy alone does not know."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+@dataclasses.dataclass
+class Frame:
+    """A decoded frame: typed header + meta dict + named numpy sections."""
+
+    ftype: int
+    client: int
+    step: int
+    meta: dict
+    arrays: dict
+    wire_nbytes: int        # total bytes on the socket (prefix included)
+
+    @property
+    def payload_nbytes(self) -> int:
+        """Codec-payload bytes only (the billed hop traffic)."""
+        return sum(a.nbytes for name, a in self.arrays.items()
+                   if name in PAYLOAD_SECTIONS)
+
+    @property
+    def aux_nbytes(self) -> int:
+        return sum(a.nbytes for name, a in self.arrays.items()
+                   if name not in PAYLOAD_SECTIONS)
+
+
+def pack_frame(ftype: int, client: int, step: int, meta: dict | None = None,
+               arrays: dict | None = None) -> bytes:
+    meta = dict(meta or {})
+    arrays = arrays or {}
+    sections = []
+    chunks = []
+    for name, arr in arrays.items():
+        arr = np.ascontiguousarray(arr)
+        sections.append([name, arr.dtype.name, list(arr.shape)])
+        chunks.append(arr.tobytes())
+    meta["sections"] = sections
+    meta_b = json.dumps(meta, separators=(",", ":")).encode()
+    payload = b"".join(chunks)
+    header = _HEADER.pack(MAGIC, VERSION, int(ftype), int(client),
+                          int(step), len(meta_b), len(payload))
+    body = header + meta_b + payload
+    return _LEN.pack(len(body)) + body
+
+
+def unpack_frame(body: bytes, *, wire_nbytes: int | None = None) -> Frame:
+    """Decode a frame body (everything after the length prefix)."""
+    magic, version, ftype, client, step, meta_len, payload_len = \
+        _HEADER.unpack_from(body)
+    if magic != MAGIC:
+        raise ValueError(f"bad frame magic {magic!r} (expected {MAGIC!r})")
+    if version != VERSION:
+        raise ValueError(f"frame version {version} != {VERSION}")
+    if _HEADER.size + meta_len + payload_len != len(body):
+        raise ValueError(
+            f"frame length mismatch: header says "
+            f"{_HEADER.size + meta_len + payload_len}, body is {len(body)}")
+    meta = json.loads(body[_HEADER.size:_HEADER.size + meta_len])
+    payload = body[_HEADER.size + meta_len:]
+    arrays = {}
+    off = 0
+    for name, dtype, shape in meta.pop("sections", []):
+        dt = _np_dtype(dtype)
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        nb = n * dt.itemsize
+        arrays[name] = np.frombuffer(
+            payload[off:off + nb], dtype=dt).reshape(shape)
+        off += nb
+    if off != payload_len:
+        raise ValueError(
+            f"payload sections cover {off} bytes, header says {payload_len}")
+    return Frame(ftype=ftype, client=client, step=step, meta=meta,
+                 arrays=arrays,
+                 wire_nbytes=(wire_nbytes if wire_nbytes is not None
+                              else _LEN.size + len(body)))
+
+
+async def read_frame(reader) -> Frame:
+    """Read one length-prefixed frame from an asyncio StreamReader."""
+    prefix = await reader.readexactly(_LEN.size)
+    (n,) = _LEN.unpack(prefix)
+    if n > MAX_FRAME_BYTES:
+        raise ValueError(f"frame of {n} bytes exceeds MAX_FRAME_BYTES")
+    body = await reader.readexactly(n)
+    return unpack_frame(body, wire_nbytes=_LEN.size + n)
+
+
+# ---------------------------------------------------------------------------
+# Activation / gradient payload codecs (host twins of parallel/wire.py).
+# ---------------------------------------------------------------------------
+
+
+def encode_act_payload(x, wire_dtype: str):
+    """Cut activation [..., d] -> (arrays, meta fields) for an ACT frame.
+
+    Dense base codec ('none' and the net-loss condition ship raw) — the
+    forward hop never sparsifies, exactly like the in-process pipeline.
+    """
+    from repro.parallel import wire
+    x = np.asarray(x)
+    q, scale = wire.host_encode(x, wire_dtype)
+    meta = {"codec": str(wire_dtype), "shape": list(x.shape),
+            "dtype": x.dtype.name}
+    if scale is None:
+        return {"raw": q}, dict(meta, kind="raw")
+    return {"q": q, "scale": scale}, dict(meta, kind="dense")
+
+
+def decode_act_payload(frame: Frame) -> np.ndarray:
+    out_dtype = _np_dtype(frame.meta["dtype"])
+    if frame.meta["kind"] == "raw":
+        return frame.arrays["raw"].astype(out_dtype)
+    from repro.parallel import wire
+    return wire.host_decode(frame.arrays["q"], frame.arrays["scale"],
+                            out_dtype)
+
+
+def encode_grad_payload(g, wire_dtype: str, ef=None):
+    """Cut-activation gradient [..., d] -> (arrays, meta, new_ef).
+
+    ``+topk<frac>`` codecs sparsify this reverse hop with per-client
+    error feedback: the BS keeps one f32 residual per client, adds it
+    before selection and carries the un-shipped mass forward — the
+    streaming twin of ``wire.coded_ppermute_ef``'s backward rule
+    (including its raw fallback at a degenerate block, where the
+    residual passes through unchanged).  Dense codecs are
+    direction-symmetric and carry no EF.
+    """
+    from repro.parallel import wire
+    g = np.asarray(g)
+    base, frac = wire.parse_wire_dtype(wire_dtype)
+    d = g.shape[-1]
+    meta = {"codec": str(wire_dtype), "shape": list(g.shape),
+            "dtype": g.dtype.name}
+    if frac is None:
+        arrays, m = encode_act_payload(g, wire_dtype)
+        return arrays, dict(meta, kind=m["kind"]), ef
+    if wire.codec_net_loss(d, g.dtype.itemsize):
+        return {"raw": g}, dict(meta, kind="raw"), ef
+    corrected = g.astype(np.float32) + (0.0 if ef is None else ef)
+    q, idx, scale = wire.host_topk_encode(corrected, wire_dtype)
+    dec_local = wire.host_topk_decode(q, idx, scale, d, np.float32)
+    return ({"q": q, "idx": idx, "scale": scale},
+            dict(meta, kind="topk"), corrected - dec_local)
+
+
+def decode_grad_payload(frame: Frame) -> np.ndarray:
+    out_dtype = _np_dtype(frame.meta["dtype"])
+    kind = frame.meta["kind"]
+    if kind == "raw":
+        return frame.arrays["raw"].astype(out_dtype)
+    from repro.parallel import wire
+    if kind == "dense":
+        return wire.host_decode(frame.arrays["q"], frame.arrays["scale"],
+                                out_dtype)
+    d = frame.meta["shape"][-1]
+    return wire.host_topk_decode(frame.arrays["q"], frame.arrays["idx"],
+                                 frame.arrays["scale"], d, out_dtype)
+
+
+def billed_hop_bytes(n_elements: int, d_model: int, wire_dtype: str,
+                     act_bytes: float, *, backward: bool = False) -> float:
+    """What the planner bills this hop: ``autotune.wire_bytes_per_element``
+    (or ``_bwd``) x elements, at the effective block for this width —
+    the number the measured ``Frame.payload_nbytes`` must match (1% rtol
+    acceptance; the discrete ``round(frac*d)`` top-k count is the only
+    divergence from the planner's continuous ``frac``)."""
+    from repro.analysis import autotune
+    block = autotune.wire_block_for(int(d_model))
+    if backward:
+        per = autotune.wire_bytes_per_element_bwd(
+            wire_dtype, act_bytes, block, d_model=int(d_model))
+    else:
+        per = autotune.wire_bytes_per_element(wire_dtype, act_bytes, block)
+    return float(per) * int(n_elements)

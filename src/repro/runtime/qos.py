@@ -1,0 +1,117 @@
+"""QoS monitor for the streaming runtime (stdlib only).
+
+Per-UE counters the in-process simulator cannot express — measured
+arrival rates, queue occupancy, backpressure and straggler behaviour of
+a real transport:
+
+* **arrival rate** — EWMA of 1/inter-arrival time per client;
+* **queue depth** — the BS-side bounded inbox occupancy (current and
+  high-water) per client;
+* **backpressure events** — arrivals that found the inbox full (the
+  reader then blocks on ``put``, which stops draining the socket and
+  pushes TCP backpressure down to the UE's ``drain()``);
+* **stalls / stragglers** — rounds where the aggregator waited longer
+  than ``stall_after_s`` on a client (stall), and which client closed
+  each aggregation round (straggler).
+
+``snapshot()`` returns a plain-JSON dict (the ``--qos-out`` payload and
+the ``streaming_smoke`` bench's non-deterministic sidecar).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class ClientStats:
+    frames_in: int = 0
+    frames_out: int = 0
+    wire_bytes_in: int = 0          # full frames incl. prefix/header/meta
+    wire_bytes_out: int = 0
+    payload_bytes_in: int = 0       # codec payload only (billed hop bytes)
+    payload_bytes_out: int = 0
+    aux_bytes_in: int = 0           # labels/control sections
+    last_arrival_t: float | None = None
+    arrival_rate_hz: float | None = None
+    queue_depth: int = 0
+    queue_high_water: int = 0
+    backpressure_events: int = 0
+    stalls: int = 0
+    straggler_rounds: int = 0
+
+
+class QoSMonitor:
+    def __init__(self, ewma: float = 0.7, stall_after_s: float = 0.25,
+                 clock=time.monotonic):
+        self.ewma = float(ewma)
+        self.stall_after_s = float(stall_after_s)
+        self.clock = clock
+        self.clients: dict = {}
+        self.rounds = 0
+
+    def _c(self, client: int) -> ClientStats:
+        if client not in self.clients:
+            self.clients[client] = ClientStats()
+        return self.clients[client]
+
+    # -- feeds ---------------------------------------------------------------
+
+    def record_arrival(self, client: int, wire_nbytes: int,
+                       payload_nbytes: int, aux_nbytes: int = 0) -> None:
+        c = self._c(client)
+        now = self.clock()
+        c.frames_in += 1
+        c.wire_bytes_in += int(wire_nbytes)
+        c.payload_bytes_in += int(payload_nbytes)
+        c.aux_bytes_in += int(aux_nbytes)
+        if c.last_arrival_t is not None:
+            dt = max(now - c.last_arrival_t, 1e-9)
+            rate = 1.0 / dt
+            c.arrival_rate_hz = (rate if c.arrival_rate_hz is None
+                                 else self.ewma * c.arrival_rate_hz
+                                 + (1.0 - self.ewma) * rate)
+        c.last_arrival_t = now
+
+    def record_send(self, client: int, wire_nbytes: int,
+                    payload_nbytes: int) -> None:
+        c = self._c(client)
+        c.frames_out += 1
+        c.wire_bytes_out += int(wire_nbytes)
+        c.payload_bytes_out += int(payload_nbytes)
+
+    def record_queue_depth(self, client: int, depth: int) -> None:
+        c = self._c(client)
+        c.queue_depth = int(depth)
+        c.queue_high_water = max(c.queue_high_water, int(depth))
+
+    def record_backpressure(self, client: int) -> None:
+        self._c(client).backpressure_events += 1
+
+    def record_stall(self, client: int) -> None:
+        self._c(client).stalls += 1
+
+    def record_round(self, straggler: int | None) -> None:
+        self.rounds += 1
+        if straggler is not None:
+            self._c(straggler).straggler_rounds += 1
+
+    # -- export --------------------------------------------------------------
+
+    def totals(self) -> dict:
+        out = {"frames_in": 0, "frames_out": 0, "wire_bytes_in": 0,
+               "wire_bytes_out": 0, "payload_bytes_in": 0,
+               "payload_bytes_out": 0, "aux_bytes_in": 0,
+               "backpressure_events": 0, "stalls": 0}
+        for c in self.clients.values():
+            for k in out:
+                out[k] += getattr(c, k)
+        return out
+
+    def snapshot(self) -> dict:
+        return {
+            "rounds": self.rounds,
+            "totals": self.totals(),
+            "clients": {str(cid): dataclasses.asdict(c)
+                        for cid, c in sorted(self.clients.items())},
+        }

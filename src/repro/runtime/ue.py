@@ -1,0 +1,155 @@
+"""UE-side client of the streaming runtime.
+
+Each client task owns one UE's data shard and runs the SUB-CUT layers
+(``sl.split.lm_split``: embedding + blocks[:l]) locally, per round:
+
+    fwd sub-cut -> host-encode activation (dense base codec)
+      -> ACT frame over the socket (shaped by the LinkShaper)
+      -> await GRAD frame (the BS's coded cut-activation gradient)
+      -> decode -> vjp through the sub-cut -> per-round client sync
+
+The client also TIMES the downlink hop (GRAD frame ``t_send`` -> local
+receive) and reports it in the next ACT frame's meta, so the BS-side
+``LinkEstimator`` sees measured samples of BOTH directions.
+
+``UESync`` is the per-round aggregation of client-side gradients
+(C2P2SL keeps every UE's sub-model synchronized each round — the
+FedAvg-style client-model update of parallel split learning).  It runs
+in-process because all UE tasks share this driver process; the SL wire
+hops — activations up, gradients down — are what crosses the socket and
+what the paper's communication model bills.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import numpy as np
+
+from repro.runtime import protocol
+
+
+class UESync:
+    """Round barrier + mean of per-client UE-side grads + one optimizer.
+
+    All clients hold the SAME ue_params; ``apply`` blocks until every
+    client of the round has contributed, applies the mean update once,
+    and releases them all with the new params.  The mean is reduced in
+    sorted-client order, so the result is independent of arrival order.
+    """
+
+    def __init__(self, params, opt, n_clients: int):
+        import jax
+        import jax.numpy as jnp
+        self.params = params
+        self.opt = opt
+        self.opt_state = opt.init(params)
+        self.n_clients = int(n_clients)
+        self.round = 0
+        self._grads: dict = {}
+        self._cond = asyncio.Condition()
+        self._jnp = jnp
+
+        def mean_update(grads_list, opt_state, params, step):
+            mean = jax.tree.map(
+                lambda *gs: sum(gs[1:], gs[0]) / len(gs), *grads_list)
+            return opt.update(mean, opt_state, params, step)
+
+        self._mean_update = jax.jit(mean_update)
+
+    async def apply(self, client: int, grads):
+        async with self._cond:
+            self._grads[client] = grads
+            if len(self._grads) == self.n_clients:
+                ordered = [self._grads[c] for c in sorted(self._grads)]
+                step = self._jnp.asarray(self.round, self._jnp.int32)
+                self.params, self.opt_state = self._mean_update(
+                    ordered, self.opt_state, self.params, step)
+                self._grads = {}
+                self.round += 1
+                self._cond.notify_all()
+            else:
+                target = self.round + 1
+                await self._cond.wait_for(lambda: self.round >= target)
+            return self.params
+
+
+class UEClient:
+    """One UE: connects, then streams ``steps`` rounds of SL hops."""
+
+    def __init__(self, client_id: int, split, data_iter, sync: UESync, *,
+                 wire_dtype: str = "none", shaper=None, ue_fwd=None,
+                 ue_pullback=None):
+        import jax
+        self.client_id = int(client_id)
+        self.split = split
+        self.data_iter = data_iter
+        self.sync = sync
+        self.wire_dtype = str(wire_dtype)
+        self.shaper = shaper
+        # jitted sub-cut forward and pullback; shareable across clients
+        # (identical shapes -> the driver passes one pair to all four)
+        self.ue_fwd = ue_fwd or jax.jit(split.ue_fwd)
+        if ue_pullback is None:
+            def pullback(params, tokens, g):
+                _, vjp = jax.vjp(lambda p: split.ue_fwd(p, tokens), params)
+                return vjp(g)[0]
+            ue_pullback = jax.jit(pullback)
+        self.ue_pullback = ue_pullback
+        self.steps_done = 0
+        self.losses: list = []
+
+    async def _send(self, writer, payload: bytes):
+        if self.shaper is not None:
+            await asyncio.sleep(self.shaper.delay_s(len(payload)))
+        writer.write(payload)
+        await writer.drain()
+
+    async def run(self, host: str, port: int, steps: int):
+        reader, writer = await asyncio.open_connection(host, port)
+        cid = self.client_id
+        try:
+            hello = protocol.pack_frame(
+                protocol.HELLO, cid, 0,
+                meta={"wire_dtype": self.wire_dtype})
+            await self._send(writer, hello)
+            dl_report = {}
+            for step in range(steps):
+                tokens, labels = next(self.data_iter)
+                params = self.sync.params
+                acts = np.asarray(self.ue_fwd(params, tokens))
+                arrays, meta = protocol.encode_act_payload(
+                    acts, self.wire_dtype)
+                arrays["labels"] = np.asarray(labels, np.int32)
+                meta.update(dl_report)
+                meta["t_send"] = time.monotonic()
+                frame = protocol.pack_frame(protocol.ACT, cid, step,
+                                            meta=meta, arrays=arrays)
+                # t_send is stamped before the shaper sleep on purpose:
+                # the emulated serialization delay IS hop time, exactly
+                # what the BS-side LinkEstimator should measure
+                await self._send(writer, frame)
+
+                grad_frame = await protocol.read_frame(reader)
+                t_recv = time.monotonic()
+                assert grad_frame.ftype == protocol.GRAD
+                assert grad_frame.step == step
+                dl_report = {
+                    "dl_nbytes": grad_frame.wire_nbytes,
+                    "dl_s": t_recv - grad_frame.meta["t_send"],
+                }
+                g = protocol.decode_grad_payload(grad_frame).astype(
+                    acts.dtype)
+                ue_grads = self.ue_pullback(params, tokens, g)
+                self.losses.append(float(grad_frame.meta["loss"]))
+                await self.sync.apply(cid, ue_grads)
+                self.steps_done += 1
+            bye = protocol.pack_frame(protocol.BYE, cid, steps,
+                                      meta=dl_report)
+            await self._send(writer, bye)
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass

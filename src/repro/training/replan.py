@@ -118,8 +118,19 @@ class ReplanConfig:
         return cls(**kwargs)
 
     def describe(self) -> str:
-        return (f"every:{self.every},hysteresis:{self.hysteresis:g}"
-                + (f",cooldown:{self.cooldown}" if self.cooldown else ""))
+        """Canonical ``--replan`` spelling: ``parse(describe()) == self``.
+
+        Non-default fields are all included (a dropped ``ewma`` used to
+        make switch logs / ``--plan-out`` records misreport the active
+        smoothing) and floats use ``repr`` — shortest exact round-trip,
+        so ``describe`` never loses precision ``parse`` would keep.
+        """
+        out = f"every:{self.every},hysteresis:{self.hysteresis!r}"
+        if self.cooldown:
+            out += f",cooldown:{self.cooldown}"
+        if self.ewma != type(self).ewma:
+            out += f",ewma:{self.ewma!r}"
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +169,11 @@ class LinkEstimator:
         self._samples.append((float(nbytes), float(seconds)))
         del self._samples[:-self.window]
         self._refit()
+
+    # The streaming runtime's per-frame feed (runtime/bs.py times every
+    # socket hop and calls this) — same sample stream as ``observe``,
+    # under the name the transport layer uses.
+    observe_hop = observe
 
     def observe_bandwidth(self, bw_Bps: float,
                           overhead_s: float | None = None) -> None:

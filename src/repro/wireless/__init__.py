@@ -1,2 +1,4 @@
-from repro.wireless.channel import ChannelParams, pathloss_db, shannon_rate, ue_rates
+from repro.wireless.channel import (BandwidthTrace, ChannelParams, LinkShaper,
+                                    bandwidth_step_trace, pathloss_db,
+                                    shannon_rate, shannon_trace, ue_rates)
 from repro.wireless.fleet import UE, Fleet, sample_fleet, BS_FLOPS, K_UE, K_BS, F_BS

@@ -62,11 +62,18 @@ class BandwidthTrace:
 
     The deterministic drift driver for the online re-planner's tests and
     the ``replan_drift`` benchmark: ``at(step)`` returns the wire
-    bandwidth in BYTES/s in force at that step.  ``steps`` are ascending
-    change points; ``bw_Bps[i]`` applies from ``steps[i]`` (inclusive)
-    until the next change point, ``bw_Bps[0]`` before ``steps[0]`` too
-    when ``steps[0] > 0`` is not given — construct with ``steps[0] == 0``
-    to be explicit.
+    bandwidth in BYTES/s in force at that step.  ``steps`` are ascending;
+    ``bw_Bps[i]`` applies from ``steps[i]`` (inclusive) until the next
+    entry.
+
+    ``steps[0] > 0`` is allowed and has EXPLICIT semantics: ``bw_Bps[0]``
+    extends backward over the pre-history ``step < steps[0]`` as well
+    (``at`` never has an undefined region).  Consequently ``steps[0]``
+    itself is never a point where ``at`` changes value — which is why
+    ``change_points`` is defined as "steps where ``at(s) != at(s - 1)``"
+    rather than by position in ``steps``.  Construct with
+    ``steps[0] == 0`` when you want the trace to spell its initial state
+    explicitly; both forms are equivalent and covered by tests.
     """
 
     steps: tuple
@@ -97,13 +104,23 @@ class BandwidthTrace:
 
     @property
     def change_points(self) -> tuple:
-        """Steps at which the bandwidth actually changes value."""
-        out, prev = [], None
+        """Steps at which ``at`` actually changes value.
+
+        Derived from the ``at`` semantics, not from position: ``prev``
+        starts at ``bw_Bps[0]`` because that rate is already in force
+        before ``steps[0]`` (pre-history extension, class docstring), so
+        the first entry only appears here when a LATER entry moves the
+        value — the old positional ``out[1:]`` slice encoded the same
+        outcome by accident and broke the moment the initial-state and
+        first-change entries were conflated.  Duplicate consecutive
+        rates never produce a change point.
+        """
+        out, prev = [], self.bw_Bps[0]
         for s, b in zip(self.steps, self.bw_Bps):
-            if prev is None or b != prev:
+            if b != prev:
                 out.append(s)
             prev = b
-        return tuple(out[1:])   # the t=first entry is the initial state
+        return tuple(out)
 
 
 def bandwidth_step_trace(before_Bps: float, after_Bps: float,
@@ -111,6 +128,56 @@ def bandwidth_step_trace(before_Bps: float, after_Bps: float,
     """The canonical drift scenario: one bandwidth step at ``at_step``."""
     return BandwidthTrace(steps=(0, int(at_step)),
                           bw_Bps=(before_Bps, after_Bps))
+
+
+# ---------------------------------------------------------------------------
+# Artificial-delay shaping (loopback socket -> emulated wireless link).
+# ---------------------------------------------------------------------------
+
+
+class LinkShaper:
+    """Serialization-delay model for the streaming runtime's loopback
+    transport: ``delay_s(nbytes) = latency_s + nbytes / bw_Bps``.
+
+    ``runtime/`` sleeps this long before writing each frame, so a
+    loopback socket behaves like a link sustaining ``bw_Bps`` — the
+    dispatcher's `LinkEstimator` then *measures* the emulated channel
+    from frame timestamps instead of reading a scripted
+    ``BandwidthTrace``.  Deliberately mutable (``set_rate``): tests and
+    fleet-churn scenarios re-tune the rate mid-run and assert the
+    re-planner notices from measurements alone.  numpy/stdlib only — the
+    sleep itself belongs to the caller's event loop.
+    """
+
+    def __init__(self, bw_Bps: float, latency_s: float = 0.0):
+        self.set_rate(bw_Bps, latency_s)
+
+    def set_rate(self, bw_Bps: float, latency_s: float | None = None):
+        if not bw_Bps > 0:
+            raise ValueError(f"LinkShaper bw_Bps={bw_Bps} must be > 0")
+        if latency_s is not None and latency_s < 0:
+            raise ValueError(
+                f"LinkShaper latency_s={latency_s} must be >= 0")
+        self.bw_Bps = float(bw_Bps)
+        if latency_s is not None:
+            self.latency_s = float(latency_s)
+
+    def delay_s(self, nbytes: int) -> float:
+        return self.latency_s + max(0, int(nbytes)) / self.bw_Bps
+
+    @classmethod
+    def from_channel(cls, ch: ChannelParams, p_tx_dbm: float, d_m: float,
+                     efficiency: float = 1.0,
+                     latency_s: float = 0.0) -> "LinkShaper":
+        """Shape the loopback to the Shannon rate (eqs (5)-(6)) of a
+        physical-layer configuration; ``efficiency`` derates the bound
+        to a deliverable goodput, as in ``shannon_trace``."""
+        rate_Bps = float(shannon_rate(p_tx_dbm, d_m, ch)) / 8.0 * efficiency
+        return cls(rate_Bps, latency_s)
+
+    def __repr__(self):
+        return (f"LinkShaper(bw_Bps={self.bw_Bps:g}, "
+                f"latency_s={self.latency_s:g})")
 
 
 def shannon_trace(ch_by_step, p_tx_dbm: float, d_m: float,

@@ -255,3 +255,39 @@ def test_moe_global_aux_flag_noop_without_mesh():
     l1 = float(m1.forward(p, batch)[0])
     l2 = float(m2.forward(p, batch)[0])
     assert l1 == l2
+
+
+def test_serve_emits_exactly_gen_tokens():
+    """Regression for the serve decode-loop off-by-one: the old loop
+    appended the PRE-decode token each iteration, so the output held the
+    prefill argmax + the first gen-1 decodes and the final decode's
+    sampled token was computed then silently discarded.  The emitted
+    sequence must be exactly the --gen decode outputs, matching a
+    hand-rolled greedy chain."""
+    from repro.launch import serve
+
+    gen, batch, plen, seed = 5, 2, 4, 3
+    toks = serve.main(["--arch", "qwen1.5-4b", "--batch", str(batch),
+                       "--prompt-len", str(plen), "--gen", str(gen),
+                       "--seed", str(seed)])
+    assert toks.shape == (batch, gen)
+
+    cfg = get_arch("qwen1.5-4b").smoke
+    model = LM(cfg)
+    params = model.init(jax.random.key(seed))
+    rng = np.random.default_rng(seed)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (batch, plen)),
+                          jnp.int32)
+    logits, ss = jax.jit(
+        model.prefill_with_cache,
+        static_argnames=("cache_len", "cache_dtype"))(
+            params, {"tokens": prompts}, cache_len=plen + gen,
+            cache_dtype=jnp.float32)
+    decode = jax.jit(make_decode_step(model))
+    tok = jnp.argmax(logits, -1, keepdims=True).astype(jnp.int32)
+    ref = []
+    for _ in range(gen):
+        logits, ss = decode(params, ss, tok)
+        tok = jnp.argmax(logits, -1, keepdims=True).astype(jnp.int32)
+        ref.append(np.asarray(tok[:, 0]))
+    np.testing.assert_array_equal(toks, np.stack(ref, axis=1))

@@ -138,6 +138,33 @@ def test_replan_config_parse():
     assert ReplanConfig.parse(cfg.describe()) == cfg
 
 
+@settings(max_examples=80, deadline=None)
+@given(every=st.integers(1, 500),
+       hysteresis=st.floats(0.0, 0.99),
+       cooldown=st.integers(0, 200),
+       ewma=st.floats(0.01, 0.99))
+def test_replan_config_describe_round_trips_all_fields(
+        every, hysteresis, cooldown, ewma):
+    """``parse(describe()) == self`` over the WHOLE config space.
+
+    Regression for the bug where ``describe()`` dropped a non-default
+    ``ewma``, so a config logged from one run silently came back with
+    the default link-estimator smoothing when replayed via ``--replan``.
+    """
+    cfg = ReplanConfig(every=every, hysteresis=hysteresis,
+                       cooldown=cooldown, ewma=ewma)
+    assert ReplanConfig.parse(cfg.describe()) == cfg
+
+
+def test_replan_config_describe_keeps_nondefault_ewma():
+    cfg = ReplanConfig(ewma=0.25)
+    assert "ewma" in cfg.describe()
+    assert ReplanConfig.parse(cfg.describe()).ewma == 0.25
+    # defaults stay terse: the canonical spelling of the default config
+    # doesn't enumerate fields nobody set
+    assert ReplanConfig().describe() == "every:50,hysteresis:0.1"
+
+
 # ---------------------------------------------------------------------------
 # LinkEstimator: the in-loop ppermute probe
 # ---------------------------------------------------------------------------

@@ -3,8 +3,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.wireless.channel import (ChannelParams, pathloss_db, shannon_rate,
-                                    ue_rates)
+from repro.wireless.channel import (BandwidthTrace, ChannelParams,
+                                    LinkShaper, bandwidth_step_trace,
+                                    pathloss_db, shannon_rate, ue_rates)
 from repro.wireless.fleet import BS_FLOPS, K_BS, K_UE, sample_fleet
 
 
@@ -38,6 +39,86 @@ def test_downlink_faster_than_uplink():
 def test_table1_compute_constants():
     assert K_UE == 16.0 and K_BS == 32.0
     assert BS_FLOPS == pytest.approx(32.0 * 80e9)
+
+
+# ---------------------------------------------------------------------------
+# BandwidthTrace semantics (pre-history extension + change_points)
+# ---------------------------------------------------------------------------
+
+
+def test_trace_at_prehistory_extends_first_rate():
+    """``bw_Bps[0]`` is in force BEFORE ``steps[0]`` too — ``at`` has no
+    undefined region, and ``steps[0]`` is never itself a value change."""
+    tr = BandwidthTrace(steps=(10, 20), bw_Bps=(4e6, 1e6))
+    assert tr.at(0) == 4e6
+    assert tr.at(9) == 4e6
+    assert tr.at(10) == 4e6          # not a change: same rate before/after
+    assert tr.at(19) == 4e6
+    assert tr.at(20) == 1e6
+    assert tr.at(10_000) == 1e6
+
+
+def test_trace_change_points_steps0_positive():
+    """Regression: the old positional ``out[1:]`` dropped the FIRST entry
+    even when a later entry was the real change; with ``steps[0] > 0``
+    the first entry is pre-history initial state, never a change."""
+    tr = BandwidthTrace(steps=(10, 20), bw_Bps=(4e6, 1e6))
+    assert tr.change_points == (20,)
+    # an explicit steps[0]==0 spelling of the same trace is equivalent
+    tr0 = BandwidthTrace(steps=(0, 20), bw_Bps=(4e6, 1e6))
+    assert tr0.change_points == (20,)
+    assert all(tr.at(s) == tr0.at(s) for s in range(0, 40))
+
+
+def test_trace_change_points_match_at_semantics():
+    """``change_points`` == {s : at(s) != at(s-1)} by definition,
+    including duplicate consecutive rates (no spurious points)."""
+    tr = BandwidthTrace(steps=(5, 10, 15, 25), bw_Bps=(2e6, 2e6, 8e5, 2e6))
+    expected = tuple(s for s in range(0, 30) if tr.at(s) != tr.at(s - 1))
+    assert tr.change_points == expected == (15, 25)
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError, match="ascending"):
+        BandwidthTrace(steps=(5, 5), bw_Bps=(1e6, 2e6))
+    with pytest.raises(ValueError, match="ascending"):
+        BandwidthTrace(steps=(10, 5), bw_Bps=(1e6, 2e6))
+    with pytest.raises(ValueError, match="> 0"):
+        BandwidthTrace(steps=(0,), bw_Bps=(0.0,))
+    with pytest.raises(ValueError, match="non-empty"):
+        BandwidthTrace(steps=(), bw_Bps=())
+
+
+def test_bandwidth_step_trace_single_change():
+    tr = bandwidth_step_trace(4e6, 1e6, at_step=50)
+    assert tr.change_points == (50,)
+    assert tr.at(49) == 4e6 and tr.at(50) == 1e6
+
+
+# ---------------------------------------------------------------------------
+# LinkShaper: loopback -> emulated wireless link
+# ---------------------------------------------------------------------------
+
+
+def test_link_shaper_delay_and_set_rate():
+    sh = LinkShaper(1e6, latency_s=0.01)
+    assert sh.delay_s(500_000) == pytest.approx(0.01 + 0.5)
+    sh.set_rate(2e6)                       # latency untouched
+    assert sh.delay_s(500_000) == pytest.approx(0.01 + 0.25)
+    sh.set_rate(2e6, latency_s=0.0)
+    assert sh.delay_s(0) == 0.0
+    with pytest.raises(ValueError):
+        sh.set_rate(0.0)
+    with pytest.raises(ValueError):
+        sh.set_rate(1e6, latency_s=-1.0)
+
+
+def test_link_shaper_from_channel_matches_shannon():
+    ch = ChannelParams()
+    sh = LinkShaper.from_channel(ch, 23.0, 200.0, efficiency=0.5)
+    rate_Bps = shannon_rate(23.0, 200.0, ch) / 8.0 * 0.5
+    assert sh.bw_Bps == pytest.approx(rate_Bps)
+    assert sh.delay_s(int(rate_Bps)) == pytest.approx(1.0, rel=1e-6)
 
 
 @settings(deadline=None, max_examples=20)
