@@ -80,7 +80,7 @@ def main(argv=None):
 
     from benchmarks import (ao_convergence, fig3_accuracy, fig4_ue_scaling,
                             fig5_bandwidth, pipeline_plan, replan_drift,
-                            roofline_report, staticcheck_gate,
+                            roofline_report, serve_bench, staticcheck_gate,
                             streaming_smoke, wire_codec)
 
     benches = {
@@ -94,6 +94,7 @@ def main(argv=None):
         "replan_drift": replan_drift.main,
         "staticcheck_gate": staticcheck_gate.main,
         "streaming_smoke": streaming_smoke.main,
+        "serve_bench": serve_bench.main,
     }
     selected = list(benches)
     if args.only:

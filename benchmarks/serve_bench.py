@@ -1,0 +1,162 @@
+"""Continuous-batching serving bench — deterministic makespan + honesty.
+
+One ``repro.serving`` engine run over a seeded ragged request mix
+(prompt length 8, generation budgets cycled from {8, 32, 128}) against
+the static run-to-completion convoy at ``--batch 8``, reduced to what is
+bit-reproducible:
+
+* **modeled makespan** in lane-token units: the engine bills ``slots``
+  per fixed-shape decode step plus exact prefill tokens
+  (``ServingEngine.engine_units``); the convoy bills ``batch *
+  max(gen)`` per group (``convoy_units``).  The gated win is the ratio
+  (>= 1.5x on this mix);
+* **bit-identity**: every request's emitted tokens equal its solo
+  batch=1 run-to-completion decode under the engine's sampling contract
+  — continuous batching changes WHEN work runs, never WHAT it computes;
+* **INFER wire honesty**: the split-serving loopback
+  (``serving/infer.py``) for each dense codec, measured payload bytes
+  vs ``protocol.billed_hop_bytes`` (<= 1% rel).
+
+No timings in the result dict — wall clock belongs to the CSV row, not
+to the ``BENCH_pipeline.json`` diff gate this feeds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+SEED = 0
+PROMPT_LEN = 8
+GEN_MIX = (8, 32, 128)
+SLOTS = 8
+CONVOY_BATCH = 8
+POLICY = "longest_first"
+INFER_CODECS = ("none", "int8", "fp8")
+
+
+def _cfg():
+    from repro.models import LMConfig
+    return LMConfig(name="serve-bench", num_layers=4, d_model=64,
+                    n_heads=4, n_kv=2, d_ff=64, vocab=64, dtype="float32")
+
+
+def _requests(cfg, n):
+    from repro.serving.scheduler import Request
+    rng = np.random.default_rng(SEED)
+    gens = np.asarray([GEN_MIX[i % len(GEN_MIX)] for i in range(n)])
+    rng.shuffle(gens)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, PROMPT_LEN),
+                    max_new_tokens=int(gens[i]))
+            for i in range(n)]
+
+
+def _solo_outputs(model, params, requests, cache_len):
+    """Batch-1 ground truth with jits shared across requests (all
+    prompts are PROMPT_LEN, so one compile covers every request) —
+    the same chain as ``serving.engine.solo_decode``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.parallel.steps import make_decode_step
+    decode = jax.jit(make_decode_step(model))
+    prefill = jax.jit(model.prefill_with_cache,
+                      static_argnames=("cache_len", "cache_dtype"))
+    out = {}
+    for req in requests:
+        logits, state = prefill(params,
+                                {"tokens": jnp.asarray(req.prompt[None])},
+                                cache_len=cache_len,
+                                cache_dtype=jnp.float32)
+        tok = jnp.argmax(logits, axis=-1, keepdims=True).astype(jnp.int32)
+        toks = []
+        for _ in range(req.max_new_tokens):
+            logits, state = decode(params, state, tok)
+            tok = jnp.argmax(logits, axis=-1,
+                             keepdims=True).astype(jnp.int32)
+            toks.append(int(tok[0, 0]))
+        out[req.rid] = np.asarray(toks, np.int32)
+    return out
+
+
+def _infer_honesty(model, params, cfg):
+    from repro.serving.infer import run_split_infer
+    rng = np.random.default_rng(SEED + 1)
+    prompts = rng.integers(0, cfg.vocab, (2, PROMPT_LEN)).astype(np.int32)
+    rows = {}
+    for codec in INFER_CODECS:
+        res = run_split_infer(model, params, cut=cfg.num_layers // 2,
+                              prompts=prompts, gen=4,
+                              cache_len=PROMPT_LEN + 4, wire_dtype=codec)
+        rel = abs(res["measured_payload_bytes"]
+                  - res["billed_payload_bytes"]) \
+            / max(res["billed_payload_bytes"], 1e-9)
+        rows[codec] = {
+            "measured_bytes": int(res["measured_payload_bytes"]),
+            "billed_bytes": float(res["billed_payload_bytes"]),
+            "frames": int(res["frames"]),
+            "ok": bool(rel <= 0.01),
+        }
+    return rows
+
+
+def main(quick: bool = True):
+    import jax
+
+    from repro.models import LM
+    from repro.serving.engine import ServingEngine, convoy_units
+
+    n_requests = 24 if quick else 48
+    cfg = _cfg()
+    model = LM(cfg)
+    params = model.init(jax.random.key(SEED))
+    cache_len = PROMPT_LEN + max(GEN_MIX)
+    requests = _requests(cfg, n_requests)
+
+    engine = ServingEngine(model, params, slots=SLOTS,
+                           cache_len=cache_len, seed=SEED, policy=POLICY)
+    outputs = engine.run(requests)
+    stats = engine.stats()
+
+    solo = _solo_outputs(model, params, requests, cache_len)
+    bitexact = all(np.array_equal(outputs[r.rid], solo[r.rid])
+                   for r in requests)
+
+    convoy = convoy_units(requests, CONVOY_BATCH)
+    speedup = convoy / max(stats["engine_units"], 1)
+    honesty = _infer_honesty(model, params, cfg)
+
+    out = {
+        "requests": n_requests,
+        "prompt_len": PROMPT_LEN,
+        "gen_mix": list(GEN_MIX),
+        "slots": SLOTS,
+        "policy": POLICY,
+        "convoy_batch": CONVOY_BATCH,
+        "decode_steps": stats["decode_steps"],
+        "prefill_chunks": stats["prefill_chunks"],
+        "engine_units": stats["engine_units"],
+        "convoy_units": convoy,
+        "modeled_speedup": float(speedup),
+        "occupancy_mean": stats["occupancy_mean"],
+        "tokens_bitexact_vs_solo": bool(bitexact),
+        "completed": stats["qos"]["completed"],
+        "infer_wire": honesty,
+        "infer_wire_ok": bool(all(r["ok"] for r in honesty.values())),
+    }
+    assert out["completed"] == n_requests, stats["qos"]
+    assert bitexact, "continuous-batching outputs diverged from solo"
+    assert speedup >= 1.5, \
+        f"modeled speedup {speedup:.2f}x < 1.5x vs convoy"
+    assert out["infer_wire_ok"], honesty
+    print(f"  {n_requests} requests (gen mix {list(GEN_MIX)}) on "
+          f"{SLOTS} slots [{POLICY}]: engine {out['engine_units']} vs "
+          f"convoy {convoy} lane-tokens -> {speedup:.2f}x, "
+          f"occupancy {out['occupancy_mean']:.2f}")
+    print(f"  bit-identical to solo decode: {bitexact}; INFER honesty: "
+          + ", ".join(f"{c} {r['measured_bytes']}B"
+                      for c, r in honesty.items()))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,10 @@ Two flavors:
 * ``add_plan_args(ap, flavor="lower")`` — the lower/compile drivers
   (dryrun, perf_iter): plain integers (0 = no pipeline), no ``auto``
   (a lowered record must pin its cell).
+* ``add_plan_args(ap, flavor="serve")`` — the serving driver: only the
+  flags that mean something for inference — ``--wire-dtype`` (the INFER
+  uplink codec; the serving hop is forward-only, so dense codecs only)
+  and ``--plan-out`` (the resolved ``ServingPlan`` evidence).
 
 ``--virtual-stages`` is the canonical interleave spelling everywhere;
 ``--pipeline-v`` keeps working as a deprecated alias (both bind to
@@ -37,8 +41,25 @@ _WIRE_HELP = ("wire codec for the pipeline's cut-activation hop "
 def add_plan_args(ap: argparse.ArgumentParser, *, flavor: str = "train",
                   plan_out: bool = True) -> argparse._ArgumentGroup:
     """Attach the shared pipeline-plan flag group; returns the group."""
-    if flavor not in ("train", "lower"):
-        raise ValueError(f"flavor must be 'train' or 'lower', got {flavor!r}")
+    if flavor not in ("train", "lower", "serve"):
+        raise ValueError(
+            f"flavor must be 'train', 'lower' or 'serve', got {flavor!r}")
+    if flavor == "serve":
+        g = ap.add_argument_group(
+            "serving plan",
+            "the serving cell — slots via --slots [auto] "
+            "(repro.analysis.autotune.choose_serving_plan), INFER-hop "
+            "codec via the shared --wire-dtype spelling")
+        g.add_argument("--wire-dtype", default="none",
+                       help="codec for the split-serving INFER uplink "
+                            "(parallel/wire.py grammar, dense only — the "
+                            "serving hop is forward-only): none | int8 | "
+                            "fp8")
+        if plan_out:
+            g.add_argument("--plan-out", default=None,
+                           help="write the resolved serving plan + its "
+                                "evidence (autotune.ServingPlan) as JSON")
+        return g
     g = ap.add_argument_group(
         "pipeline plan",
         "the (stages, k, v, wire) plan cell — one Plan currency "

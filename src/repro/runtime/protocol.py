@@ -40,6 +40,8 @@ ACT = 2       # client -> server: coded cut activations + labels
 GRAD = 3      # server -> client: coded cut-activation gradient
 STATS = 4     # either direction: QoS/telemetry snapshot
 BYE = 5       # client -> server: clean shutdown
+INFER = 6     # serving: UE->BS coded cut activation (phase=prefill/decode),
+              # BS->UE sampled token reply (phase=tok, aux section, un-billed)
 
 _HEADER = struct.Struct("!4sBBHIII")
 _LEN = struct.Struct("!I")

@@ -115,3 +115,129 @@ class QoSMonitor:
             "clients": {str(cid): dataclasses.asdict(c)
                         for cid, c in sorted(self.clients.items())},
         }
+
+
+# ---------------------------------------------------------------------------
+# Serving-side QoS: per-request latency percentiles + admission counters.
+# ---------------------------------------------------------------------------
+
+
+def percentile(samples, q: float) -> float | None:
+    """Nearest-rank percentile (q in [0, 100]) of a sample list.
+
+    Deterministic and schema-stable (no interpolation): the value
+    returned is always one of the samples.  None on an empty list.
+    """
+    if not samples:
+        return None
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q={q} must be in [0, 100]")
+    xs = sorted(float(x) for x in samples)
+    rank = max(1, int(-(-q * len(xs) // 100)))     # ceil(q/100 * n), >= 1
+    return xs[min(rank, len(xs)) - 1]
+
+
+@dataclasses.dataclass
+class RequestTimeline:
+    """Latency stamps of one serving request (wall clock + engine step)."""
+
+    submit_t: float
+    admit_t: float | None = None
+    first_token_t: float | None = None
+    done_t: float | None = None
+    admit_step: int | None = None
+    first_token_step: int | None = None
+    done_step: int | None = None
+    tokens: int = 0
+
+    @property
+    def ttft_s(self) -> float | None:
+        """Submit -> first emitted token (queue wait + prefill + the
+        first decode)."""
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    @property
+    def per_token_s(self) -> float | None:
+        """Mean decode seconds per emitted token after the first."""
+        if self.done_t is None or self.first_token_t is None \
+                or self.tokens < 2:
+            return None
+        return (self.done_t - self.first_token_t) / (self.tokens - 1)
+
+
+class ServingQoS:
+    """Per-request latency percentiles + admission/reject counters for
+    the continuous-batching serving engine (``repro.serving.engine``).
+
+    The engine stamps submit/admit/first-token/done per request; the
+    snapshot derives p50/p99 TTFT and per-token latency (nearest-rank,
+    over COMPLETED requests) next to the admission counters.  ``clock``
+    is injectable so tests can drive a scripted clock and pin exact
+    percentile values.
+    """
+
+    def __init__(self, clock=time.monotonic):
+        self.clock = clock
+        self.requests: dict = {}
+        self.admitted = 0
+        self.rejected = 0
+        self.completed = 0
+
+    def _r(self, rid: int) -> RequestTimeline:
+        if rid not in self.requests:
+            raise KeyError(f"request {rid} was never submitted")
+        return self.requests[rid]
+
+    def record_submit(self, rid: int) -> None:
+        if rid in self.requests:
+            raise ValueError(f"request {rid} submitted twice")
+        self.requests[rid] = RequestTimeline(submit_t=self.clock())
+
+    def record_reject(self, rid: int) -> None:
+        self.rejected += 1
+        self.requests.pop(rid, None)
+
+    def record_admit(self, rid: int, step: int) -> None:
+        self.admitted += 1
+        r = self._r(rid)
+        r.admit_t = self.clock()
+        r.admit_step = int(step)
+
+    def record_token(self, rid: int, step: int) -> None:
+        r = self._r(rid)
+        r.tokens += 1
+        if r.first_token_t is None:
+            r.first_token_t = self.clock()
+            r.first_token_step = int(step)
+
+    def record_done(self, rid: int, step: int) -> None:
+        self.completed += 1
+        r = self._r(rid)
+        r.done_t = self.clock()
+        r.done_step = int(step)
+
+    def latency_percentiles(self) -> dict:
+        done = [r for r in self.requests.values() if r.done_t is not None]
+        ttft = [r.ttft_s for r in done if r.ttft_s is not None]
+        per_tok = [r.per_token_s for r in done if r.per_token_s is not None]
+        return {
+            "p50_ttft_s": percentile(ttft, 50),
+            "p99_ttft_s": percentile(ttft, 99),
+            "p50_tok_s": percentile(per_tok, 50),
+            "p99_tok_s": percentile(per_tok, 99),
+        }
+
+    def snapshot(self) -> dict:
+        return {
+            "admitted": self.admitted,
+            "rejected": self.rejected,
+            "completed": self.completed,
+            "in_flight": sum(1 for r in self.requests.values()
+                             if r.admit_t is not None and r.done_t is None),
+            "queued": sum(1 for r in self.requests.values()
+                          if r.admit_t is None),
+            "latency": self.latency_percentiles(),
+            "tokens_emitted": sum(r.tokens for r in self.requests.values()),
+        }

@@ -1,0 +1,34 @@
+"""Continuous-batching split-inference serving engine.
+
+``scheduler`` is numpy-only and imports eagerly; the jax-backed pieces
+(the slot arena, the engine's jitted decode+sample step, and the
+split-inference loopback) load lazily so request/queue plumbing stays
+importable without an accelerator stack.
+"""
+from repro.serving.scheduler import POLICIES, Request, Scheduler
+
+__all__ = [
+    "BSInferServer", "FreeList", "POLICIES", "Request", "Scheduler",
+    "ServingEngine", "SplitDecode", "UEInferClient", "convoy_units",
+    "make_sample_step", "run_split_infer", "slot_axes", "solo_decode",
+]
+
+_LAZY = {
+    "BSInferServer": "repro.serving.infer",
+    "FreeList": "repro.serving.kv",
+    "ServingEngine": "repro.serving.engine",
+    "SplitDecode": "repro.serving.infer",
+    "UEInferClient": "repro.serving.infer",
+    "convoy_units": "repro.serving.engine",
+    "make_sample_step": "repro.serving.engine",
+    "run_split_infer": "repro.serving.infer",
+    "slot_axes": "repro.serving.kv",
+    "solo_decode": "repro.serving.engine",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
